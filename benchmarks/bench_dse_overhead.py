@@ -1,0 +1,53 @@
+"""DSE search overhead — the paper claims "minimal overhead" for the
+hierarchical search vs brute force.  Times the three stages (top-K path
+search, cost-table fill, global argmin) per model and the brute-force
+alternative's combinatorial size.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (
+    ALL_DATAFLOWS,
+    FPGA_VU9P,
+    STRATEGY_SPACE,
+    find_topk_paths,
+    global_search,
+)
+from repro.models.vision import model_layers
+from .common import emit
+
+
+def run() -> list[dict]:
+    rows = []
+    for model, dataset in [("resnet18", "cifar10"), ("vit_ti4", "cifar10")]:
+        layers = model_layers(model, dataset, batch=1)
+        t0 = time.perf_counter()
+        layer_paths = [find_topk_paths(l.tt_network, k=4) for l in layers]
+        t_paths = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = global_search(layer_paths, FPGA_VU9P)
+        t_search = time.perf_counter() - t0
+        per_layer = max(len(p) for p in layer_paths) * 3 * 3  # p x c x d
+        brute = 0
+        for h, cs in STRATEGY_SPACE.items():
+            combo = 1
+            for p in layer_paths:
+                combo *= len(p) * len(cs) * len(ALL_DATAFLOWS)
+            brute += combo
+        rows.append({
+            "model": f"{model}/{dataset}",
+            "layers": len(layers),
+            "path_search_s": t_paths,
+            "table_plus_argmin_s": t_search,
+            "hierarchical_evals": sum(
+                len(p) * 3 * 3 for p in layer_paths),
+            "brute_force_combos": float(brute),
+        })
+    emit("bench_dse_overhead", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

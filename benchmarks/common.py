@@ -1,0 +1,44 @@
+"""Shared benchmark plumbing: timing, CSV/JSON emission."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "benchmarks")
+
+
+def emit(name: str, rows: list[dict], keys: list[str] | None = None) -> None:
+    """Print a CSV block and persist JSON."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    if not rows:
+        print(f"# {name}: (no rows)")
+        return
+    keys = keys or list(rows[0].keys())
+    print(f"# --- {name} ---")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(_fmt(r.get(k)) for k in keys))
+    print()
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kw):
+    """(result, best_seconds)"""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best

@@ -1,0 +1,43 @@
+"""Fig. 5 — latency across top-K paths x dataflows x core partitionings.
+
+Shows the full (P x C x D) latency surface for one tensorized layer:
+even for a fixed contraction path, IS/OS/WS and 1x1 / 1x2 / 2x1 core
+splits change latency substantially — the coupling the joint DSE exploits.
+"""
+
+from __future__ import annotations
+
+from repro.core import (
+    ALL_DATAFLOWS,
+    ALL_PARTITIONINGS,
+    FPGA_VU9P,
+    find_topk_paths,
+    layer_latency,
+)
+from repro.models.vision import vit_ti4_layers
+from .common import emit
+
+
+def run() -> list[dict]:
+    layer = vit_ti4_layers(batch=64)[2]  # b0.fc1: 192 -> 768
+    paths = find_topk_paths(layer.tt_network, k=4)
+    rows = []
+    for pi, path in enumerate(paths):
+        for part in ALL_PARTITIONINGS:
+            for df in ALL_DATAFLOWS:
+                rep = layer_latency(path, df, part, FPGA_VU9P)
+                rows.append({
+                    "path": f"path-{pi + 1}",
+                    "macs": path.macs,
+                    "partitioning": f"{part[0]}x{part[1]}",
+                    "dataflow": df.value,
+                    "latency_us": rep.seconds * 1e6,
+                    "utilization": rep.utilization,
+                    "parallel_stages": rep.n_parallel_stages,
+                })
+    emit("fig5_dataflow", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,78 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table3]
+
+Each module prints a CSV block and writes results/benchmarks/<name>.json.
+The roofline report additionally consumes results/dryrun/*.json when the
+multi-pod dry-run has been executed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    bench_dse_overhead,
+    fig3_paths,
+    fig5_dataflow,
+    table1_compression,
+    table2_dse_choices,
+    table3_latency,
+    table4_efficiency,
+)
+
+SUITES = {
+    "table1": table1_compression.run,
+    "table2": table2_dse_choices.run,
+    "table3": table3_latency.run,
+    "table4": table4_efficiency.run,
+    "fig3": fig3_paths.run,
+    "fig5": fig5_dataflow.run,
+    "dse_overhead": bench_dse_overhead.run,
+}
+
+
+def roofline_report():
+    """Summarize the dry-run roofline table if artifacts exist."""
+    import glob
+    import json
+    import os
+    from repro.launch.roofline import RESULTS_DIR, analyze_cell, markdown_table
+    paths = sorted(glob.glob(os.path.join(RESULTS_DIR, "*_pod_tt.json")))
+    rows = [r for p in paths
+            for r in [analyze_cell(json.load(open(p)))] if r]
+    if rows:
+        print("# --- roofline (from dry-run artifacts) ---")
+        print(markdown_table(rows))
+        print()
+    else:
+        print("# roofline: no dry-run artifacts found (run repro.launch.dryrun)")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SUITES)
+    failed = []
+    for name in names:
+        t0 = time.time()
+        try:
+            SUITES[name]()
+            print(f"# {name} done in {time.time()-t0:.1f}s\n", flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if not args.only:
+        roofline_report()
+    if failed:
+        print(f"FAILED suites: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

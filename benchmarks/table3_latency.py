@@ -1,0 +1,72 @@
+"""Table 3 — end-to-end latency: TT-optimized vs dense baseline.
+
+The paper measures 3.28-4.00x (inference) and 3.42-3.85x (training)
+speedups on the VU9P.  Here both sides run through the same simulator:
+dense layers execute their single GEMM under the best dataflow; TT layers
+execute the DSE-optimal (path, partitioning, dataflow).  Training is
+modelled as 3x tokens (see table2 note).
+"""
+
+from __future__ import annotations
+
+from repro.core import (
+    ALL_DATAFLOWS,
+    FPGA_VU9P,
+    find_topk_paths,
+    global_search,
+    greedy_path,
+    layer_latency,
+)
+from repro.models.vision import model_layers
+from .common import emit
+
+PAPER = {
+    ("resnet18", "cifar10", "inference"): 4.00,
+    ("resnet18", "tiny_imagenet", "inference"): 3.92,
+    ("vit_ti4", "cifar10", "inference"): 3.28,
+    ("resnet18", "cifar10", "training"): 3.85,
+    ("resnet18", "tiny_imagenet", "training"): 3.82,
+    ("vit_ti4", "cifar10", "training"): 3.42,
+}
+
+
+def _dense_latency(layers) -> float:
+    total = 0.0
+    for l in layers:
+        path = greedy_path(l.dense_network)   # single GEMM
+        total += min(
+            layer_latency(path, d, (1, 1), FPGA_VU9P).seconds
+            for d in ALL_DATAFLOWS
+        )
+    return total
+
+
+def _tt_latency(layers) -> float:
+    layer_paths = [find_topk_paths(l.tt_network, k=4) for l in layers]
+    return global_search(layer_paths, FPGA_VU9P).total_latency_s
+
+
+def run() -> list[dict]:
+    rows = []
+    for model, dataset in [("resnet18", "cifar10"),
+                           ("resnet18", "tiny_imagenet"),
+                           ("vit_ti4", "cifar10")]:
+        for mode, batch in (("inference", 1), ("training", 3)):
+            layers = model_layers(model, dataset, batch=batch)
+            dense = _dense_latency(layers)
+            tt = _tt_latency(layers)
+            rows.append({
+                "model": model,
+                "dataset": dataset,
+                "mode": mode,
+                "dense_ms": dense * 1e3,
+                "tt_opt_ms": tt * 1e3,
+                "speedup": dense / tt,
+                "paper_speedup": PAPER[(model, dataset, mode)],
+            })
+    emit("table3_latency", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Core contribution: tensor-network DSE for tensorized layers.
+
+Public API: tensor-network builders, MAC-guided top-K path search, the
+systolic latency simulator (FPGA + TPU parameterizations), Algorithm-1
+global search, TT-SVD, and the jit-safe path executor.
+"""
+
+from .tensor_network import (
+    GemmShape,
+    Node,
+    TensorNetwork,
+    dense_linear_network,
+    factorize,
+    tt_conv_network,
+    tt_linear_network,
+)
+from .paths import CandidatePath, find_topk_paths, greedy_path, reconstruction_path
+from .simulator import (
+    ALL_DATAFLOWS,
+    ALL_PARTITIONINGS,
+    STRATEGY_SPACE,
+    Dataflow,
+    FPGA_VU9P,
+    HardwareConfig,
+    Partitioning,
+    gemm_latency,
+    layer_latency,
+    simulate,
+)
+from .tpu_cost import TPU_V5E
+from .dse import (
+    DSEResult,
+    LayerChoice,
+    brute_force_search,
+    explore_model,
+    global_search,
+    pareto_front,
+)
+from .tt import TTMatrix, reconstruction_error, tt_rand, tt_svd
+from .contraction import core_tensors, execute_path
+
+__all__ = [
+    "GemmShape", "Node", "TensorNetwork", "dense_linear_network", "factorize",
+    "tt_conv_network", "tt_linear_network",
+    "CandidatePath", "find_topk_paths", "greedy_path", "reconstruction_path",
+    "ALL_DATAFLOWS", "ALL_PARTITIONINGS", "STRATEGY_SPACE", "Dataflow",
+    "FPGA_VU9P", "HardwareConfig", "Partitioning", "gemm_latency",
+    "layer_latency", "simulate", "TPU_V5E",
+    "DSEResult", "LayerChoice", "brute_force_search", "explore_model",
+    "global_search", "pareto_front",
+    "TTMatrix", "reconstruction_error", "tt_rand", "tt_svd",
+    "core_tensors", "execute_path",
+]

@@ -1,0 +1,80 @@
+"""Execute a searched contraction path as a jit-safe jnp einsum tree.
+
+The path (Python-level, static) is unrolled into a sequence of
+``jnp.tensordot`` calls at trace time — no dynamic control flow enters the
+jaxpr, so the executor composes with jit / scan / shard_map / grad.
+
+Edge bookkeeping mirrors ``TensorNetwork.contract_pair``: result axes are
+A's free edges followed by B's free edges, and the merged node is appended
+to the working list.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax.numpy as jnp
+
+from .paths import CandidatePath
+from .tensor_network import TensorNetwork
+
+
+def execute_path(
+    tn: TensorNetwork,
+    path: CandidatePath | Sequence[tuple[int, int]],
+    tensors: Mapping[str, jnp.ndarray],
+    out_edges: Sequence[str] | None = None,
+    preferred_dtype=None,
+    constrain=None,
+) -> jnp.ndarray:
+    """Contract ``tn`` along ``path`` using ``tensors[name]`` per node.
+
+    ``out_edges`` fixes the axis order of the result (defaults to the
+    network's free edges in first-appearance order).  ``constrain``, if
+    given, is called as ``constrain(edges, tensor) -> tensor`` after every
+    pairwise contraction — the hook the distributed layer uses to pin
+    sharding onto intermediates (GSPMD loses it through merged dims).
+    """
+    steps = path.steps if isinstance(path, CandidatePath) else tuple(path)
+    work: list[tuple[tuple[str, ...], jnp.ndarray]] = []
+    for node in tn.nodes:
+        t = tensors[node.name]
+        if tuple(t.shape) != node.dims:
+            raise ValueError(
+                f"tensor {node.name}: shape {t.shape} != declared {node.dims}"
+            )
+        work.append((node.edges, t))
+
+    for (i, j) in steps:
+        (ea, ta) = work[i]
+        (eb, tb) = work[j]
+        shared = [e for e in ea if e in eb]
+        ax_a = [ea.index(e) for e in shared]
+        ax_b = [eb.index(e) for e in shared]
+        tc = jnp.tensordot(ta, tb, axes=(ax_a, ax_b),
+                           preferred_element_type=preferred_dtype)
+        ec = tuple(e for e in ea if e not in shared) + tuple(
+            e for e in eb if e not in shared
+        )
+        if constrain is not None:
+            tc = constrain(ec, tc)
+        work = [w for s, w in enumerate(work) if s not in (i, j)]
+        work.append((ec, tc))
+
+    if len(work) != 1:
+        raise ValueError("path did not fully contract the network")
+    edges, result = work[0]
+    if out_edges is not None:
+        perm = [edges.index(e) for e in out_edges]
+        result = jnp.transpose(result, perm)
+    return result
+
+
+def core_tensors(
+    tn: TensorNetwork, arrays: Sequence[jnp.ndarray], input_name: str = "X"
+) -> dict[str, jnp.ndarray]:
+    """Zip weight-core arrays (in node order, skipping the input node)."""
+    names = [n.name for n in tn.nodes if n.name != input_name]
+    if len(names) != len(arrays):
+        raise ValueError(f"{len(names)} core nodes vs {len(arrays)} arrays")
+    return dict(zip(names, arrays))

@@ -1,0 +1,159 @@
+"""Global latency-driven design-space exploration (paper Algorithm 1).
+
+Stage 1 — design-space construction: per layer, the MAC-guided top-K path
+search yields P_l; the partitioning space C_all and dataflow space D are
+global.  Stage 2 — a cost table T[l, p, c, d] is populated by the latency
+simulator.  Stage 3 — hierarchical search: for each global hardware
+strategy h (which constrains C to C_h), the problem decomposes into
+independent per-layer argmins; the best strategy wins.  This is exhaustive
+over the (pruned) space, so the returned configuration is optimal within
+it — matching the paper's "mathematically guaranteeing the optimal
+solution with minimal overhead".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Mapping, Sequence
+
+from .paths import CandidatePath, find_topk_paths
+from .simulator import (
+    ALL_DATAFLOWS,
+    STRATEGY_SPACE,
+    Dataflow,
+    HardwareConfig,
+    FPGA_VU9P,
+    Partitioning,
+    simulate,
+)
+from .tensor_network import TensorNetwork
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerChoice:
+    """Optimal (p, c, d) for one layer under the winning strategy."""
+
+    layer: int
+    path_index: int
+    path: CandidatePath
+    partitioning: Partitioning
+    dataflow: Dataflow
+    latency_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class DSEResult:
+    strategy: str
+    choices: tuple[LayerChoice, ...]
+    total_latency_s: float
+    cost_table: Mapping[tuple[int, int, Partitioning, Dataflow], float]
+
+    @property
+    def per_layer_latency(self) -> tuple[float, ...]:
+        return tuple(c.latency_s for c in self.choices)
+
+
+def build_cost_table(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    hw: HardwareConfig,
+    partitionings: Sequence[Partitioning],
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+    simulate_fn: Callable[[CandidatePath, Partitioning, Dataflow, HardwareConfig], float] = simulate,
+) -> dict[tuple[int, int, Partitioning, Dataflow], float]:
+    """T[l, p, c, d] <- Simulate(p, c, d) for all valid configs (Alg. 1, l.2)."""
+    table: dict[tuple[int, int, Partitioning, Dataflow], float] = {}
+    for l, paths in enumerate(layer_paths):
+        for p_idx, path in enumerate(paths):
+            for c in partitionings:
+                for d in dataflows:
+                    table[(l, p_idx, c, d)] = simulate_fn(path, c, d, hw)
+    return table
+
+
+def global_search(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    hw: HardwareConfig = FPGA_VU9P,
+    strategy_space: Mapping[str, Sequence[Partitioning]] = STRATEGY_SPACE,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+    simulate_fn: Callable[[CandidatePath, Partitioning, Dataflow, HardwareConfig], float] = simulate,
+) -> DSEResult:
+    """Algorithm 1: global strategy loop + independent per-layer argmins."""
+    all_parts = sorted({c for cs in strategy_space.values() for c in cs})
+    table = build_cost_table(layer_paths, hw, all_parts, dataflows, simulate_fn)
+
+    best_cost = float("inf")
+    best: tuple[str, tuple[LayerChoice, ...]] | None = None
+    for h, c_h in strategy_space.items():
+        choices: list[LayerChoice] = []
+        cost_h = 0.0
+        for l, paths in enumerate(layer_paths):
+            lat, arg = min(
+                ((table[(l, p, c, d)], (p, c, d))
+                 for p in range(len(paths))
+                 for c in c_h
+                 for d in dataflows),
+                key=lambda t: t[0],
+            )
+            p, c, d = arg
+            choices.append(LayerChoice(l, p, paths[p], c, d, lat))
+            cost_h += lat
+        if cost_h < best_cost:
+            best_cost = cost_h
+            best = (h, tuple(choices))
+    assert best is not None
+    return DSEResult(best[0], best[1], best_cost, table)
+
+
+def brute_force_search(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    hw: HardwareConfig = FPGA_VU9P,
+    strategy_space: Mapping[str, Sequence[Partitioning]] = STRATEGY_SPACE,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+    simulate_fn: Callable[[CandidatePath, Partitioning, Dataflow, HardwareConfig], float] = simulate,
+) -> float:
+    """Exhaustive cross-product search — test oracle for ``global_search``.
+
+    Exponential in L; only usable for tiny models in tests.
+    """
+    best = float("inf")
+    for h, c_h in strategy_space.items():
+        per_layer_opts = []
+        for paths in layer_paths:
+            per_layer_opts.append([
+                (p, c, d)
+                for p in range(len(paths))
+                for c in c_h
+                for d in dataflows
+            ])
+        for combo in itertools.product(*per_layer_opts):
+            cost = sum(
+                simulate_fn(layer_paths[l][p], c, d, hw)
+                for l, (p, c, d) in enumerate(combo)
+            )
+            best = min(best, cost)
+    return best
+
+
+def explore_model(
+    networks: Sequence[TensorNetwork],
+    hw: HardwareConfig = FPGA_VU9P,
+    top_k: int = 4,
+    strategy_space: Mapping[str, Sequence[Partitioning]] = STRATEGY_SPACE,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+) -> DSEResult:
+    """End-to-end DSE for a model given per-layer tensor networks."""
+    layer_paths = [find_topk_paths(tn, k=top_k) for tn in networks]
+    return global_search(layer_paths, hw, strategy_space, dataflows)
+
+
+def pareto_front(points: Sequence[tuple[float, float]]) -> list[int]:
+    """Indices of the Pareto-optimal (cost1, cost2) points (both minimised)."""
+    order = sorted(range(len(points)), key=lambda i: (points[i][0], points[i][1]))
+    front: list[int] = []
+    best_y = float("inf")
+    for i in order:
+        if points[i][1] < best_y:
+            front.append(i)
+            best_y = points[i][1]
+    return front

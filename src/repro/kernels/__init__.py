@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the DSE's compute hot-spots.
+
+``tt_gemm``      — dataflow-configurable tiled GEMM (IS/OS/WS as grid order).
+``streaming_tt`` — fused TT contraction, cores VMEM-pinned, tokens streamed.
+``ops``          — jit'd wrappers (interpret=True on CPU, Mosaic on TPU).
+``ref``          — pure-jnp oracles.
+"""
+
+from . import ops, ref
+from .tt_gemm import tt_gemm
+from .streaming_tt import streaming_tt_linear, build_block_network
+
+__all__ = ["ops", "ref", "tt_gemm", "streaming_tt_linear", "build_block_network"]

@@ -1,0 +1,80 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU containers the kernels execute in ``interpret=True`` mode (Python
+evaluation of the kernel body — numerics identical); on TPU backends the
+compiled Mosaic kernels run.  ``interpret`` is resolved from the default
+backend unless forced.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.paths import CandidatePath
+from repro.core.tensor_network import TensorNetwork
+from . import tt_gemm as _tt_gemm
+from . import streaming_tt as _streaming
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dataflow", "block_m", "block_k", "block_n", "interpret"),
+)
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    dataflow: str = "OS",
+    block_m: int = 128,
+    block_k: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Dataflow-configurable GEMM; pads to block multiples and slices back."""
+    interpret = _default_interpret() if interpret is None else interpret
+    m, k = a.shape
+    _, n = b.shape
+    ap = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
+    bp = _pad_to(_pad_to(b, 0, block_k), 1, block_n)
+    out = _tt_gemm.tt_gemm(
+        ap, bp,
+        dataflow=dataflow,  # type: ignore[arg-type]
+        block_m=block_m, block_k=block_k, block_n=block_n,
+        interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def tt_linear(
+    x: jax.Array,
+    cores: Sequence[jax.Array],
+    tn: TensorNetwork,
+    path: CandidatePath,
+    block_tokens: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Streaming TT-linear; pads the token dim to the block multiple."""
+    interpret = _default_interpret() if interpret is None else interpret
+    tokens = x.shape[0]
+    xp = _pad_to(x, 0, block_tokens)
+    y = _streaming.streaming_tt_linear(
+        xp, cores, tn, path, block_tokens=block_tokens, interpret=interpret
+    )
+    return y[:tokens]

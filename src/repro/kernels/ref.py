@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels (numerical ground truth)."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contraction import execute_path
+from repro.core.paths import CandidatePath
+from repro.core.tensor_network import Node, TensorNetwork
+
+
+def _with_batch(tn: TensorNetwork, tokens: int) -> TensorNetwork:
+    """Rebind the X node's batch dim (contraction paths are batch-size
+    agnostic — the network structure is identical)."""
+    nodes = [
+        Node(n.name, n.edges, (tokens,) + n.dims[1:], n.kind)
+        if n.name == "X" else n
+        for n in tn.nodes
+    ]
+    return TensorNetwork(nodes)
+
+
+def gemm_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """fp32-accumulated matmul reference."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def tt_linear_ref(
+    x: jax.Array,
+    cores: Sequence[jax.Array],
+    tn: TensorNetwork,
+    path: CandidatePath,
+    out_dtype=None,
+) -> jax.Array:
+    """TT-linear forward along ``path`` on the whole batch at once."""
+    out_dtype = out_dtype or x.dtype
+    in_modes = tuple(
+        d for n in tn.nodes if n.name == "X"
+        for e, d in zip(n.edges, n.dims) if e != "b"
+    )
+    tokens = x.shape[0]
+    tn = _with_batch(tn, tokens)
+    tensors = {"X": x.reshape((tokens,) + in_modes)}
+    names = [n.name for n in tn.nodes if n.name != "X"]
+    for name, c in zip(names, cores):
+        tensors[name] = c
+    n_out_edges = len(tn.free_edges) - 1
+    out_edges = ("b",) + tuple(f"i{t+1}" for t in range(n_out_edges))
+    y = execute_path(tn, path, tensors, out_edges=out_edges,
+                     preferred_dtype=jnp.float32)
+    return y.reshape(tokens, -1).astype(out_dtype)

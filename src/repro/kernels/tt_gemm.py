@@ -1,0 +1,168 @@
+"""Pallas TPU GEMM with DSE-selectable dataflow (IS / OS / WS).
+
+The paper's FPGA engine switches dataflows by re-muxing which operand is
+pinned in the PE array.  The TPU-native analogue is the *grid iteration
+order* of a tiled Pallas matmul: the operand whose BlockSpec ``index_map``
+is constant along the innermost grid axis stays VMEM-resident across
+consecutive grid steps, while the others stream HBM->VMEM.  The resulting
+HBM traffic asymmetry is exactly the IS/OS/WS asymmetry the paper's
+simulator models:
+
+  OS  grid=(m, n, k), k innermost  -> C block resident (classic matmul);
+                                      A, B stream; C written once.
+  WS  grid=(k, n, m), m innermost  -> B (weight) block resident; A streams;
+                                      C partials spill/refill per k-fold.
+  IS  grid=(m, k, n), n innermost  -> A (input) block resident; B streams;
+                                      C partials spill/refill per k-fold.
+
+Block shapes are the DSE's tiling decision <T_M, T_K, T_N>; MXU-aligned
+multiples of 128 (8 on the sublane dim) are preferred.
+
+Grids must tile the operands exactly — the ``ops.py`` wrapper zero-pads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DataflowName = Literal["IS", "OS", "WS"]
+
+
+def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """Output-stationary: k innermost; fp32 accumulator scratch in VMEM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _ws_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """Weight-stationary: grid (k, n, m), m innermost; B block pinned.
+
+    The output block is revisited once per k step (non-consecutive), so
+    partial sums round-trip through HBM — the WS traffic cost the
+    simulator charges as ``C * (2*k_folds - 1)``.
+    """
+    k = pl.program_id(0)
+    part = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _first():
+        o_ref[...] = part.astype(o_ref.dtype)
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
+
+
+def _is_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """Input-stationary: grid (m, k, n), n innermost; A block pinned."""
+    k = pl.program_id(1)
+    part = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _first():
+        o_ref[...] = part.astype(o_ref.dtype)
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
+
+
+def tt_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    dataflow: DataflowName = "OS",
+    block_m: int = 128,
+    block_k: int = 128,
+    block_n: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``a @ b`` via a dataflow-configurable Pallas kernel.
+
+    Dims must be multiples of the block shape (use ``ops.tt_gemm_padded``
+    otherwise).  ``interpret=True`` runs the kernel body in Python on CPU —
+    the container-side validation mode; TPU is the compile target.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    if m % block_m or k % block_k or n % block_n:
+        raise ValueError(
+            f"dims ({m},{k},{n}) not multiples of blocks "
+            f"({block_m},{block_k},{block_n})"
+        )
+    out_dtype = out_dtype or a.dtype
+    n_m, n_k, n_n = m // block_m, k // block_k, n // block_n
+    out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)
+
+    if dataflow == "OS":
+        grid = (n_m, n_n, n_k)
+        a_spec = pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk))
+        b_spec = pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j))
+        o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j))
+        kernel = functools.partial(_os_kernel, n_k=n_k)
+        scratch = [pltpu_accumulator((block_m, block_n))]
+        dims = ("parallel", "parallel", "arbitrary")
+    elif dataflow == "WS":
+        grid = (n_k, n_n, n_m)
+        a_spec = pl.BlockSpec((block_m, block_k), lambda kk, j, i: (i, kk))
+        b_spec = pl.BlockSpec((block_k, block_n), lambda kk, j, i: (kk, j))
+        o_spec = pl.BlockSpec((block_m, block_n), lambda kk, j, i: (i, j))
+        kernel = functools.partial(_ws_kernel, n_k=n_k)
+        scratch = []
+        dims = ("arbitrary", "parallel", "parallel")
+    elif dataflow == "IS":
+        grid = (n_m, n_k, n_n)
+        a_spec = pl.BlockSpec((block_m, block_k), lambda i, kk, j: (i, kk))
+        b_spec = pl.BlockSpec((block_k, block_n), lambda i, kk, j: (kk, j))
+        o_spec = pl.BlockSpec((block_m, block_n), lambda i, kk, j: (i, j))
+        kernel = functools.partial(_is_kernel, n_k=n_k)
+        scratch = []
+        dims = ("parallel", "arbitrary", "parallel")
+    else:
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+
+    kwargs = {}
+    if not interpret:
+        # TPU compile target: annotate which grid axes may be parallelised
+        from jax.experimental.pallas import tpu as pltpu
+
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=dims
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(a, b)
+
+
+def pltpu_accumulator(shape: tuple[int, int]):
+    """fp32 VMEM scratch accumulator (works in interpret mode too)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,1 @@
+"""Launchers: production mesh, jitted steps, dry-run, train/serve drivers."""

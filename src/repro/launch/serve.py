@@ -1,0 +1,85 @@
+"""Serving driver: batched prefill + decode loop with KV/state caches.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tt-lm-100m --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_rules, make_test_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import api
+from repro.models.config import ShapeConfig
+from repro.sharding import use_rules
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tt-lm-100m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, tt=not args.dense, smoke=args.smoke)
+    max_seq = args.prompt_len + args.gen
+    shape = ShapeConfig("cli", max_seq, args.batch, "decode")
+    mesh = make_test_mesh()
+    rules = make_rules(cfg, shape, mesh)
+    m = api(cfg)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len))
+    batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+    if cfg.family in ("vlm", "encdec"):
+        n = cfg.n_frontend_tokens or 8
+        batch["frontend"] = jnp.asarray(
+            rng.normal(size=(args.batch, n, cfg.d_model)), jnp.dtype(cfg.dtype))
+
+    with use_rules(rules):
+        params = m.init_params(jax.random.PRNGKey(0))
+        prefill = jax.jit(make_prefill_step(cfg, max_seq=max_seq))
+        decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+
+        t0 = time.time()
+        logits, caches = prefill(params, batch)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+
+        key = jax.random.PRNGKey(1)
+        tokens = []
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        t0 = time.time()
+        for i in range(args.gen):
+            tokens.append(np.asarray(tok))
+            pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+            logits, caches = decode(params, tok, caches, pos)
+            if args.temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits / args.temperature, axis=-1)[:, None].astype(jnp.int32)
+            else:
+                tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(logits)
+        t_decode = time.time() - t0
+
+    out = np.concatenate(tokens, axis=1)
+    print(f"prefill {args.batch}x{args.prompt_len}: {t_prefill*1e3:.1f} ms")
+    print(f"decode  {args.gen} steps: {t_decode*1e3:.1f} ms "
+          f"({t_decode/args.gen*1e3:.2f} ms/tok, batch {args.batch})")
+    print("generated token ids (first row):", out[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Jitted step builders: train / prefill / decode.
+
+Each builder closes over the ModelConfig and returns a pure function
+suitable for ``jax.jit(..., in_shardings=..., out_shardings=...)`` and
+``.lower()`` against ShapeDtypeStructs (the dry-run) or real arrays (the
+drivers).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, api
+from repro.optim import (
+    CompressState,
+    adamw_update,
+    clip_by_global_norm,
+    compress_decompress,
+)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    lr: Callable | float = 3e-4,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+    grad_compress: bool = False,
+):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``grad_compress`` the opt_state is (AdamWState, CompressState)
+    and gradients round-trip through int8 error-feedback before AdamW —
+    the cross-pod wire format.
+    """
+    m = api(cfg)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(m.train_loss)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        if grad_compress:
+            adam_state, comp_state = opt_state
+            grads, comp_state = compress_decompress(grads, comp_state)
+            new_params, adam_state = adamw_update(
+                grads, adam_state, params, lr, weight_decay=weight_decay)
+            new_opt = (adam_state, comp_state)
+        else:
+            new_params, new_opt = adamw_update(
+                grads, opt_state, params, lr, weight_decay=weight_decay)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: Optional[int] = None):
+    """(params, batch) -> (last-token logits, primed caches)."""
+    m = api(cfg)
+
+    def step(params, batch):
+        s = batch["tokens"].shape[1]
+        return m.prefill(params, batch, max_seq or s)
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, token, caches, cache_pos) -> (logits, new caches)."""
+    m = api(cfg)
+
+    def step(params, token, caches, cache_pos):
+        return m.decode_step(params, token, caches, cache_pos)
+
+    return step
+
+
+def make_eval_loss(cfg: ModelConfig):
+    m = api(cfg)
+
+    def step(params, batch):
+        return m.train_loss(params, batch)
+
+    return step

@@ -1,0 +1,100 @@
+"""Model zoo + family-dispatched API.
+
+``api(cfg)`` returns the family's (init_params, train_loss, prefill,
+decode_step, init_caches) callables with a uniform signature, and
+``input_specs(cfg, shape)`` builds the ShapeDtypeStruct stand-ins the
+multi-pod dry-run lowers against (no device allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec as _encdec
+from . import lm as _lm
+from .config import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+
+ENC_LEN_CAP = 4096   # encoder frame length for enc-dec decode shapes
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init_params: Callable
+    train_loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_caches: Callable
+
+
+def api(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        return ModelAPI(
+            init_params=lambda rng: _encdec.init_params(rng, cfg),
+            train_loss=lambda p, b: _encdec.train_loss(cfg, p, b),
+            prefill=lambda p, b, max_seq: _encdec.prefill(cfg, p, b, max_seq),
+            decode_step=lambda p, t, c, pos: _encdec.decode_step(cfg, p, t, c, pos),
+            init_caches=lambda batch, max_seq: _encdec.init_caches(
+                cfg, batch, max_seq, min(ENC_LEN_CAP, max_seq), jnp.dtype(cfg.dtype)),
+        )
+    return ModelAPI(
+        init_params=lambda rng: _lm.init_params(rng, cfg),
+        train_loss=lambda p, b: _lm.train_loss(cfg, p, b),
+        prefill=lambda p, b, max_seq: _lm.prefill(cfg, p, b, max_seq),
+        decode_step=lambda p, t, c, pos: _lm.decode_step(cfg, p, t, c, pos),
+        init_caches=lambda batch, max_seq: _lm.init_caches(
+            cfg, batch, max_seq, jnp.dtype(cfg.dtype)),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step.
+
+    train:   {tokens, labels[, frontend]}
+    prefill: {tokens[, frontend]}
+    decode:  {token, cache_pos, caches}
+    """
+    gb, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    tok = jax.ShapeDtypeStruct((gb, s), i32)
+
+    def frontend_spec(seq: int):
+        if cfg.family == "vlm":
+            n = cfg.n_frontend_tokens or 256
+            return jax.ShapeDtypeStruct((gb, n, cfg.d_model), dt)
+        if cfg.family == "encdec":
+            n = min(ENC_LEN_CAP, seq)
+            return jax.ShapeDtypeStruct((gb, n, cfg.d_model), dt)
+        return None
+
+    if shape.step == "train":
+        batch = {"tokens": tok, "labels": jax.ShapeDtypeStruct((gb, s), i32)}
+        fe = frontend_spec(s)
+        if fe is not None:
+            batch["frontend"] = fe
+        return batch
+    if shape.step == "prefill":
+        batch = {"tokens": tok}
+        fe = frontend_spec(s)
+        if fe is not None:
+            batch["frontend"] = fe
+        return batch
+    if shape.step == "decode":
+        max_seq = s + (cfg.n_frontend_tokens or 256 if cfg.family == "vlm" else 0)
+        caches = jax.eval_shape(lambda: api(cfg).init_caches(gb, max_seq))
+        return {
+            "token": jax.ShapeDtypeStruct((gb, 1), i32),
+            "cache_pos": jax.ShapeDtypeStruct((), i32),
+            "caches": caches,
+        }
+    raise ValueError(shape.step)
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "shape_applicable",
+    "ModelAPI", "api", "input_specs", "ENC_LEN_CAP",
+]

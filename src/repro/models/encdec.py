@@ -1,0 +1,250 @@
+"""Encoder-decoder backbone (Seamless-M4T medium shape).
+
+The audio frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, S_enc, D).  The encoder is a
+bidirectional transformer over frames; the decoder is a causal LM with
+cross-attention into the encoder memory.
+
+Decode caches: per-decoder-layer self-attention KV plus cross-attention
+K/V computed once at prefill (static afterwards — the standard serving
+structure).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import (
+    KVCache,
+    LinearSpec,
+    attention_apply,
+    attention_init,
+    embedding_apply,
+    embedding_init,
+    head_apply,
+    init_kv_cache,
+    linear_apply,
+    linear_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+from repro.sharding import shard
+from .blocks import attn_spec, mlp_spec
+from .config import ModelConfig
+from .lm import cross_entropy, embed_spec, head_spec
+
+
+class EncDecCaches(NamedTuple):
+    self_kv: Any       # stacked (L_dec, ...) KVCache
+    cross_k: jax.Array  # (L_dec, B, S_enc, H_kv, Dh)
+    cross_v: jax.Array
+
+
+def _xattn_specs(cfg: ModelConfig) -> dict[str, LinearSpec]:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    kv = cfg.n_kv_heads
+    return {
+        "wq": LinearSpec("xattn.wq", d, h * hd, False, "attn", cfg.tt),
+        "wk": LinearSpec("xattn.wk", d, kv * hd, False, "attn", cfg.tt),
+        "wv": LinearSpec("xattn.wv", d, kv * hd, False, "attn", cfg.tt),
+        "wo": LinearSpec("xattn.wo", h * hd, d, False, "attn", cfg.tt),
+    }
+
+
+def _enc_block_init(rng, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention_init(k1, attn_spec(cfg, "enc_attn", causal=False), dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k2, mlp_spec(cfg, "enc_mlp"), dtype),
+    }
+
+
+def _dec_block_init(rng, cfg: ModelConfig, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    xs = _xattn_specs(cfg)
+    kx = jax.random.split(k2, 4)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention_init(k1, attn_spec(cfg, "dec_attn"), dtype),
+        "lnx": rmsnorm_init(cfg.d_model, dtype),
+        "xattn": {nm: linear_init(kk, xs[nm], dtype) for nm, kk in zip(xs, kx)},
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k3, mlp_spec(cfg, "dec_mlp"), dtype),
+    }
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 5)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    params = {
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(enc_keys),
+        "enc_ln_f": rmsnorm_init(cfg.d_model, dtype),
+        "embed": embedding_init(ks[2], embed_spec(cfg), dtype),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(dec_keys),
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = linear_init(ks[3], head_spec(cfg), dtype)
+    return params
+
+
+def _cross_attention(cfg, p, x, mem_k, mem_v):
+    """x (B, Sq, D) attends into precomputed memory K/V (B, Sk, Hkv, Dh)."""
+    import math as _m
+    xs = _xattn_specs(cfg)
+    b, sq, _ = x.shape
+    h, hd, kv = cfg.n_heads, cfg.hd, cfg.n_kv_heads
+    q = linear_apply(xs["wq"], p["wq"], x).reshape(b, sq, h, hd)
+    n_rep = h // kv
+    if n_rep > 1:
+        bb, sk, hh, dd = mem_k.shape
+        mem_k = jnp.broadcast_to(mem_k[:, :, :, None, :], (bb, sk, hh, n_rep, dd)
+                                 ).reshape(bb, sk, h, dd)
+        mem_v = jnp.broadcast_to(mem_v[:, :, :, None, :], (bb, sk, hh, n_rep, dd)
+                                 ).reshape(bb, sk, h, dd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        mem_k.astype(jnp.float32)) / _m.sqrt(hd)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(mem_v.dtype), mem_v)
+    return linear_apply(xs["wo"], p["wo"], out.reshape(b, sq, h * hd))
+
+
+def _memory_kv(cfg, p, memory):
+    xs = _xattn_specs(cfg)
+    b, sk, _ = memory.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    k = linear_apply(xs["wk"], p["wk"], memory).reshape(b, sk, kv, hd)
+    v = linear_apply(xs["wv"], p["wv"], memory).reshape(b, sk, kv, hd)
+    return k, v
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames (B, S_enc, D) -> encoder memory (B, S_enc, D)."""
+    x = shard(frames, "batch", "seq", None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    spec = attn_spec(cfg, "enc_attn", causal=False)
+
+    def body(x, p_l):
+        h, _ = attention_apply(spec, p_l["attn"], rmsnorm(p_l["ln1"], x), positions)
+        x = x + h
+        x = x + mlp_apply(mlp_spec(cfg, "enc_mlp"), p_l["mlp"], rmsnorm(p_l["ln2"], x))
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    else:
+        for l in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[l], params["enc_blocks"]))
+    return rmsnorm(params["enc_ln_f"], x)
+
+
+def _decoder(cfg, params, tokens, memory_kv, caches, cache_pos,
+             return_hidden: bool = False):
+    """memory_kv: (stacked cross_k, cross_v) per layer OR per-layer compute."""
+    x = embedding_apply(embed_spec(cfg), params["embed"], tokens)
+    x = shard(x, "batch", "seq", None)
+    b, s, _ = x.shape
+    base = cache_pos if cache_pos is not None else 0
+    positions = jnp.broadcast_to(base + jnp.arange(s)[None, :], (b, s))
+    spec = attn_spec(cfg, "dec_attn")
+    has_cache = caches is not None
+
+    def body(x, inp):
+        p_l, (xk, xv), cache_l = inp
+        h, new_cache = attention_apply(
+            spec, p_l["attn"], rmsnorm(p_l["ln1"], x), positions, cache_l, cache_pos)
+        x = x + h
+        x = x + _cross_attention(cfg, p_l["xattn"], rmsnorm(p_l["lnx"], x), xk, xv)
+        x = x + mlp_apply(mlp_spec(cfg, "dec_mlp"), p_l["mlp"], rmsnorm(p_l["ln2"], x))
+        return x, new_cache
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    xs = (params["dec_blocks"], memory_kv, caches if has_cache else None)
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, xs)
+    else:
+        outs = []
+        for l in range(cfg.n_layers):
+            x, nc = body(x, jax.tree.map(lambda a: a[l], xs))
+            outs.append(nc)
+        new_caches = (
+            jax.tree.map(lambda *ys: jnp.stack(ys), *outs) if has_cache else None
+        )
+    x = rmsnorm(params["ln_f"], x)
+    if return_hidden:
+        return x, (new_caches if has_cache else None)
+    logits = _head(cfg, params, x)
+    return logits, (new_caches if has_cache else None)
+
+
+def _head(cfg, params, x):
+    if cfg.tie_embeddings:
+        logits = head_apply(embed_spec(cfg), params["embed"], x)
+    else:
+        logits = linear_apply(head_spec(cfg), params["head"], x)
+    if logits.ndim == 2:        # chunked-loss path: (tokens, V)
+        return shard(logits, "tokens", "model")
+    return shard(logits, "batch", None, "model")
+
+
+def _stacked_memory_kv(cfg, params, memory):
+    """Cross K/V for every decoder layer: (L, B, S_enc, Hkv, Dh) x2."""
+    def per_layer(p_l):
+        return _memory_kv(cfg, p_l["xattn"], memory)
+    return jax.vmap(per_layer)(params["dec_blocks"])
+
+
+def train_loss(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    memory = encode(cfg, params, batch["frontend"])
+    mem_kv = _stacked_memory_kv(cfg, params, memory)
+    if cfg.loss_chunk:
+        from .lm import chunked_cross_entropy
+        hidden, _ = _decoder(cfg, params, batch["tokens"], mem_kv, None, None,
+                             return_hidden=True)
+        return chunked_cross_entropy(
+            lambda h: _head(cfg, params, h), hidden, batch["labels"],
+            cfg.loss_chunk)
+    logits, _ = _decoder(cfg, params, batch["tokens"], mem_kv, None, None)
+    return cross_entropy(logits, batch["labels"])
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int, enc_len: int,
+                dtype=jnp.bfloat16) -> EncDecCaches:
+    one = init_kv_cache(attn_spec(cfg, "dec_attn"), batch, max_seq, dtype)
+    self_kv = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+    xk = jnp.zeros((cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.hd), dtype)
+    return EncDecCaches(self_kv=self_kv, cross_k=xk, cross_v=xk)
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_seq: int):
+    """Encode frames + run the decoder prompt; returns (logits, caches)."""
+    b, s = batch["tokens"].shape
+    memory = encode(cfg, params, batch["frontend"])
+    xk, xv = _stacked_memory_kv(cfg, params, memory)
+    self0 = init_caches(cfg, b, max_seq, memory.shape[1], jnp.dtype(cfg.dtype)).self_kv
+    logits, self_kv = _decoder(
+        cfg, params, batch["tokens"], (xk, xv), self0, jnp.zeros((), jnp.int32))
+    return logits[:, -1], EncDecCaches(self_kv, xk.astype(jnp.dtype(cfg.dtype)),
+                                       xv.astype(jnp.dtype(cfg.dtype)))
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
+                caches: EncDecCaches, cache_pos: jax.Array):
+    logits, new_self = _decoder(
+        cfg, params, token, (caches.cross_k, caches.cross_v),
+        caches.self_kv, cache_pos)
+    return logits[:, -1], EncDecCaches(new_self, caches.cross_k, caches.cross_v)

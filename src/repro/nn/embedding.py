@@ -1,0 +1,160 @@
+"""Token embedding and LM head: dense or TT-factorized.
+
+TT embedding follows the TT-Rec / TT-matrix format: the table
+``E in R^{V x D}`` is stored as cores ``G_k in R^{r_{k-1} x v_k x d_k x r_k}``
+with ``V = prod v_k`` and ``D = prod d_k``.  A row gather decomposes the
+token id into mixed-radix digits (i_1..i_d) and contracts the per-digit
+slices ``G_k[:, i_k, :, :]`` — per-token cost ``O(d * r^2 * d_k)`` instead
+of a ``V x D`` table lookup, and parameter count
+``O(sum r^2 v_k d_k)`` instead of ``V * D``.
+
+The LM head (``D -> V`` projection) reuses the *same* cores transposed —
+weight tying — or a separate TT-linear when untied.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tensor_network import factorize
+from repro.sharding import shard
+from .linear import TTConfig
+
+
+def _shard_tokens_dim(x: jax.Array) -> jax.Array:
+    """Constrain dim0 (the flattened token dim) to the DP(+SP) axes — keeps
+    the TT chain's intermediates sharded (and consistent with the layout of
+    the surrounding tokens-major tensors, avoiding forced reshards)."""
+    return shard(x, *(("tokens",) + (None,) * (x.ndim - 1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingSpec:
+    name: str
+    vocab: int
+    d_model: int
+    tt: Optional[TTConfig] = None
+
+    @property
+    def tensorized(self) -> bool:
+        return self.tt is not None and self.tt.enabled and "embed" in self.tt.targets
+
+    @property
+    def vocab_modes(self) -> tuple[int, ...]:
+        assert self.tt is not None
+        return factorize(self.vocab, self.tt.d)
+
+    @property
+    def d_modes(self) -> tuple[int, ...]:
+        assert self.tt is not None
+        return factorize(self.d_model, self.tt.d)
+
+    @property
+    def tt_ranks(self) -> tuple[int, ...]:
+        """Interior TT-matrix ranks (length d-1), clipped to full rank."""
+        assert self.tt is not None
+        vm, dm = self.vocab_modes, self.d_modes
+        ranks = []
+        left, right = 1, self.vocab * self.d_model
+        for k in range(len(vm) - 1):
+            left *= vm[k] * dm[k]
+            right //= vm[k] * dm[k]
+            ranks.append(min(self.tt.rank, left, right))
+        return tuple(ranks)
+
+    def n_params(self) -> int:
+        if not self.tensorized:
+            return self.vocab * self.d_model
+        vm, dm = self.vocab_modes, self.d_modes
+        ranks = (1,) + self.tt_ranks + (1,)
+        return sum(
+            ranks[k] * vm[k] * dm[k] * ranks[k + 1] for k in range(len(vm))
+        )
+
+
+def embedding_init(rng: jax.Array, spec: EmbeddingSpec, dtype=jnp.float32) -> dict:
+    if not spec.tensorized:
+        table = jax.random.normal(rng, (spec.vocab, spec.d_model)) * 0.02
+        return {"table": table.astype(dtype)}
+    vm, dm = spec.vocab_modes, spec.d_modes
+    ranks = (1,) + spec.tt_ranks + (1,)
+    d = len(vm)
+    # product of d gaussian cores -> per-core std for overall 0.02 stddev
+    prod_ranks = math.prod(spec.tt_ranks) or 1
+    per_core_std = (0.02**2 / prod_ranks) ** (1.0 / (2 * d))
+    keys = jax.random.split(rng, d)
+    params = {}
+    for k in range(d):
+        shape = (ranks[k], vm[k], dm[k], ranks[k + 1])
+        params[f"core{k}"] = (
+            jax.random.normal(keys[k], shape) * per_core_std
+        ).astype(dtype)
+    return params
+
+
+def _mixed_radix(ids: jax.Array, modes: tuple[int, ...]) -> list[jax.Array]:
+    """Decompose ids into digits for the given mode radices (big-endian)."""
+    digits = []
+    rem = ids
+    for radix in reversed(modes[1:]):
+        digits.append(rem % radix)
+        rem = rem // radix
+    digits.append(rem % modes[0])
+    return list(reversed(digits))
+
+
+def embedding_apply(spec: EmbeddingSpec, params: dict, ids: jax.Array) -> jax.Array:
+    """ids (...,) int32 -> embeddings (..., d_model)."""
+    if not spec.tensorized:
+        return params["table"][ids]
+    vm, dm = spec.vocab_modes, spec.d_modes
+    digits = _mixed_radix(ids, vm)
+    # left-to-right chain contraction: carry (..., r_k, D_prefix)
+    out = None
+    for k in range(len(vm)):
+        core = params[f"core{k}"]             # (r_{k-1}, v_k, d_k, r_k)
+        sl = core[:, digits[k]]               # (r_{k-1}, ..., d_k, r_k)
+        # move the token axes in front: (..., r_{k-1}, d_k, r_k)
+        sl = jnp.moveaxis(sl, 0, -3)
+        if out is None:
+            out = sl[..., 0, :, :]            # r_0 == 1 -> (..., d_0, r_1)
+        else:
+            # (..., P, r) x (..., r, d_k, r') -> (..., P, d_k, r')
+            out = jnp.einsum("...pr,...rds->...pds", out, sl)
+            out = out.reshape(out.shape[:-3] + (out.shape[-3] * out.shape[-2], out.shape[-1]))
+        out = _shard_tokens_dim(out)
+    out = out[..., 0]                         # r_d == 1
+    return out.reshape(ids.shape + (spec.d_model,))
+
+
+def head_apply(spec: EmbeddingSpec, params: dict, x: jax.Array) -> jax.Array:
+    """Tied LM head: x (..., D) -> logits (..., V) through the same weights.
+
+    Right-to-left chain: carry (T, d_1..d_k, V_suffix, r_k); step k folds
+    d_k away and grows the vocab suffix by v_k.  Contraction order is a
+    *memory* decision (the paper's thesis applied to the LM head): the
+    left-to-right order's peak intermediate is ``T * v_1 * r * D/d_1``
+    (~8x the logits for a 65k vocab), while right-to-left peaks at ~2x
+    the logits buffer.  FLOPs are comparable; memory is not.
+    """
+    if not spec.tensorized:
+        return jnp.einsum("...d,vd->...v", x, params["table"])
+    vm, dm = spec.vocab_modes, spec.d_modes
+    lead = x.shape[:-1]
+    tokens = math.prod(lead) if lead else 1
+    carry = x.reshape((tokens,) + tuple(dm))  # (T, d_1, ..., d_d)
+    carry = carry[..., None, None]            # (T, d_1..d_d, V_s=1, r_d=1)
+    for k in range(len(vm) - 1, -1, -1):
+        core = params[f"core{k}"]             # (r_{k-1}, v_k, d_k, r_k)
+        # (t, ..., d_k, V_s, r_k) x (r_{k-1}, v_k, d_k, r_k)
+        carry = jnp.einsum("t...dvs,rwds->t...wvr", carry, core)
+        shp = carry.shape                     # (t, ..., v_k, V_s, r_{k-1})
+        carry = carry.reshape(shp[:-3] + (shp[-3] * shp[-2], shp[-1]))
+        carry = _shard_tokens_dim(carry)
+    logits = carry[:, :, 0]                   # r_0 == 1 -> (T, V)
+    return logits.reshape(lead + (spec.vocab,))

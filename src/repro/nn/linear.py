@@ -1,0 +1,226 @@
+"""Unified linear layer: dense or TT-factorized (the paper's technique).
+
+Every projection in every model goes through this module, so flipping
+``TTConfig.enabled`` tensorizes an entire architecture.  TT weights are
+stored as their cores; the forward pass contracts input activations
+through the cores along a contraction path chosen by the DSE (defaults to
+the MAC-optimal candidate when no plan is installed).
+
+Path search happens at *trace time* (shapes are static under jit) and is
+memoised per network signature, so scan/jit tracing pays it once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paths import CandidatePath, find_topk_paths
+from repro.core.tensor_network import TensorNetwork, factorize, tt_linear_network
+from repro.core.contraction import execute_path
+from repro.sharding import shard as _shard
+
+
+_EDGE_AXES = {"b": "tokens", "b0": "batch", "b1": "seq"}
+
+
+def _constrain_tokens(edges, t):
+    """Pin TT-intermediate batch edges to their logical mesh axes.
+
+    Split batch edges (b0=batch, b1=seq) keep the (B, S, ...) layout of
+    the surrounding model — no tokens-flatten relayout; the flattened
+    single-edge form maps to the merged DP(+SP) "tokens" axis.
+    """
+    axes = tuple(_EDGE_AXES.get(e) for e in edges)
+    if any(axes):
+        return _shard(t, *axes)
+    return t
+
+
+@dataclasses.dataclass(frozen=True)
+class TTConfig:
+    """Model-wide tensorization settings."""
+
+    enabled: bool = False
+    d: int = 3                      # modes per side
+    rank: int = 16
+    min_dim: int = 512              # tensorize only matrices with both dims >= this
+    targets: tuple[str, ...] = ("attn", "mlp", "head")
+    top_k: int = 4                  # candidate paths kept per layer (paper K)
+
+    def applies(self, tag: str, d_in: int, d_out: int) -> bool:
+        return (
+            self.enabled
+            and tag in self.targets
+            and min(d_in, d_out) >= self.min_dim
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    """Static description of one projection."""
+
+    name: str
+    d_in: int
+    d_out: int
+    bias: bool = False
+    tag: str = "mlp"                # attn | mlp | head | embed | other
+    tt: Optional[TTConfig] = None
+
+    @property
+    def tensorized(self) -> bool:
+        return self.tt is not None and self.tt.applies(self.tag, self.d_in, self.d_out)
+
+    @property
+    def in_modes(self) -> tuple[int, ...]:
+        assert self.tt is not None
+        return factorize(self.d_in, self.tt.d)
+
+    @property
+    def out_modes(self) -> tuple[int, ...]:
+        assert self.tt is not None
+        return factorize(self.d_out, self.tt.d)
+
+    @property
+    def tt_ranks(self) -> tuple[int, ...]:
+        """Interior ranks, clipped to the full-rank bound at each cut."""
+        assert self.tt is not None
+        modes = self.out_modes + self.in_modes
+        ranks = []
+        left, right = 1, math.prod(modes)
+        for k in range(len(modes) - 1):
+            left *= modes[k]
+            right //= modes[k]
+            ranks.append(min(self.tt.rank, left, right))
+        return tuple(ranks)
+
+    def n_params(self) -> int:
+        if not self.tensorized:
+            return self.d_in * self.d_out + (self.d_out if self.bias else 0)
+        modes = self.out_modes + self.in_modes
+        ranks = (1,) + self.tt_ranks + (1,)
+        total = sum(ranks[k] * modes[k] * ranks[k + 1] for k in range(len(modes)))
+        return total + (self.d_out if self.bias else 0)
+
+    def network(self, batch: int) -> TensorNetwork:
+        return tt_linear_network(batch, self.in_modes, self.out_modes, self.tt_ranks)
+
+
+# ---------------------------------------------------------------------------
+# trace-time path cache + plan installation
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=4096)
+def _topk_paths_cached(
+    batch,                        # int or tuple of leading dims
+    in_modes: tuple[int, ...],
+    out_modes: tuple[int, ...],
+    ranks: tuple[int, ...],
+    k: int,
+) -> tuple[CandidatePath, ...]:
+    tn = tt_linear_network(batch, in_modes, out_modes, ranks)
+    return tuple(find_topk_paths(tn, k=k))
+
+
+_PLAN: dict[str, int] = {}  # linear name -> chosen path index (from global DSE)
+
+
+def install_plan(plan: dict[str, int]) -> None:
+    """Install DSE-selected per-layer path indices (name -> index)."""
+    _PLAN.clear()
+    _PLAN.update(plan)
+
+
+def planned_path_index(name: str) -> int:
+    return _PLAN.get(name, 0)
+
+
+# ---------------------------------------------------------------------------
+# init / apply
+# ---------------------------------------------------------------------------
+
+def linear_init(rng: jax.Array, spec: LinearSpec, dtype=jnp.float32) -> dict:
+    if not spec.tensorized:
+        k_w, _ = jax.random.split(rng)
+        std = math.sqrt(2.0 / (spec.d_in + spec.d_out))
+        params = {"w": (jax.random.normal(k_w, (spec.d_in, spec.d_out)) * std).astype(dtype)}
+    else:
+        modes = spec.out_modes + spec.in_modes
+        ranks = (1,) + spec.tt_ranks + (1,)
+        target = math.sqrt(2.0 / (spec.d_in + spec.d_out))
+        prod_ranks = math.prod(spec.tt_ranks) or 1
+        per_core_std = (target**2 / prod_ranks) ** (1.0 / (2 * len(modes)))
+        keys = jax.random.split(rng, len(modes))
+        cores = []
+        for k in range(len(modes)):
+            shape: tuple[int, ...] = (ranks[k], modes[k], ranks[k + 1])
+            # boundary ranks of 1 are squeezed (matches tensor-network nodes)
+            if k == 0:
+                shape = (modes[k], ranks[k + 1])
+            elif k == len(modes) - 1:
+                shape = (ranks[k], modes[k])
+            cores.append((jax.random.normal(keys[k], shape) * per_core_std).astype(dtype))
+        params = {f"core{k}": c for k, c in enumerate(cores)}
+    if spec.bias:
+        params["b"] = jnp.zeros((spec.d_out,), dtype)
+    return params
+
+
+def linear_apply(
+    spec: LinearSpec,
+    params: dict,
+    x: jax.Array,
+    *,
+    path_index: Optional[int] = None,
+) -> jax.Array:
+    """y = x @ W(^T) + b with x: (..., d_in) -> (..., d_out)."""
+    lead = x.shape[:-1]
+    if not spec.tensorized:
+        y = jnp.einsum("...i,io->...o", x, params["w"])
+    else:
+        # keep (B, S) as split batch edges when present: shardings survive
+        # without any tokens-flatten relayout (see _constrain_tokens)
+        if len(lead) == 2:
+            bdims: tuple | int = tuple(lead)
+            b_edges = ("b0", "b1")
+        else:
+            bdims = math.prod(lead) if lead else 1
+            b_edges = ("b",)
+        xs = x.reshape(tuple(lead[:2] if len(lead) == 2 else (bdims,))
+                       + spec.in_modes)
+        in_edges = b_edges + tuple(f"j{t+1}" for t in range(len(spec.in_modes)))
+        xs = _constrain_tokens(in_edges, xs)
+        paths = _topk_paths_cached(
+            bdims, spec.in_modes, spec.out_modes, spec.tt_ranks, spec.tt.top_k
+        )
+        idx = path_index if path_index is not None else planned_path_index(spec.name)
+        idx = min(idx, len(paths) - 1)
+        tn = tt_linear_network(bdims, spec.in_modes, spec.out_modes,
+                               spec.tt_ranks)
+        tensors = {"X": xs}
+        core_names = [n.name for n in tn.nodes if n.name != "X"]
+        for k, name in enumerate(core_names):
+            tensors[name] = params[f"core{k}"]
+        out_edges = b_edges + tuple(f"i{t+1}" for t in range(len(spec.out_modes)))
+        y = execute_path(tn, paths[idx], tensors, out_edges=out_edges,
+                         constrain=_constrain_tokens)
+        y = y.reshape(lead + (spec.d_out,))
+    if spec.bias:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def linear_flops(spec: LinearSpec, tokens: int, path_index: int = 0) -> int:
+    """Forward FLOPs for ``tokens`` rows (dense vs TT path)."""
+    if not spec.tensorized:
+        return 2 * tokens * spec.d_in * spec.d_out
+    paths = _topk_paths_cached(
+        tokens, spec.in_modes, spec.out_modes, spec.tt_ranks, spec.tt.top_k
+    )
+    return 2 * paths[min(path_index, len(paths) - 1)].macs

@@ -1,0 +1,59 @@
+"""Feed-forward blocks: SwiGLU / GELU, dense or TT-factorized."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+from .linear import LinearSpec, TTConfig, linear_apply, linear_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPSpec:
+    name: str
+    d_model: int
+    d_ff: int
+    kind: str = "swiglu"          # swiglu | gelu
+    tt: Optional[TTConfig] = None
+
+    @property
+    def gate_spec(self) -> LinearSpec:
+        return LinearSpec(f"{self.name}.wg", self.d_model, self.d_ff, False, "mlp", self.tt)
+
+    @property
+    def up_spec(self) -> LinearSpec:
+        return LinearSpec(f"{self.name}.wu", self.d_model, self.d_ff, False, "mlp", self.tt)
+
+    @property
+    def down_spec(self) -> LinearSpec:
+        return LinearSpec(f"{self.name}.wd", self.d_ff, self.d_model, False, "mlp", self.tt)
+
+
+def mlp_init(rng: jax.Array, spec: MLPSpec, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 3)
+    params = {
+        "wu": linear_init(ks[1], spec.up_spec, dtype),
+        "wd": linear_init(ks[2], spec.down_spec, dtype),
+    }
+    if spec.kind == "swiglu":
+        params["wg"] = linear_init(ks[0], spec.gate_spec, dtype)
+    return params
+
+
+def mlp_apply(spec: MLPSpec, params: dict, x: jax.Array) -> jax.Array:
+    up = linear_apply(spec.up_spec, params["wu"], x)
+    up = shard(up, "batch", "seq", "model")
+    if spec.kind == "swiglu":
+        gate = linear_apply(spec.gate_spec, params["wg"], x)
+        gate = shard(gate, "batch", "seq", "model")
+        h = jax.nn.silu(gate) * up
+    elif spec.kind == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(spec.kind)
+    y = linear_apply(spec.down_spec, params["wd"], h)
+    return shard(y, "batch", "seq", None)

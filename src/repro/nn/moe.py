@@ -1,0 +1,164 @@
+"""Mixture-of-Experts FFN: GShard-style capacity dispatch + shared experts.
+
+Routing is done in fixed-size token groups (``router_group``) so the
+dispatch tensors stay bounded at long sequence lengths.  Dispatch uses the
+two-one-hot construction (expert one-hot x capacity-slot one-hot), never
+materialising a (tokens, k, E, C) tensor.
+
+Expert weights are stacked on a leading expert axis; when the expert
+count divides the mesh's model axis they shard there (true EP), otherwise
+the per-expert ``d_ff`` dim shards (TP-MoE) — both handled by the global
+param-sharding heuristic.  Expert FFNs are dense or TT-factorized
+(vmapped over experts), so the paper's technique covers MoE archs too.
+
+Shared experts (Qwen2-MoE style) are merged into one wide always-on FFN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+from .linear import LinearSpec, TTConfig, linear_apply, linear_init
+from .mlp import MLPSpec, mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    name: str
+    d_model: int
+    d_ff: int                      # per routed expert
+    n_experts: int
+    top_k: int
+    n_shared: int = 0              # always-on shared experts (merged)
+    shared_d_ff: Optional[int] = None
+    capacity_factor: float = 1.25
+    router_group: int = 512        # tokens per routing group
+    kind: str = "swiglu"
+    tt: Optional[TTConfig] = None
+
+    @property
+    def expert_gate(self) -> LinearSpec:
+        return LinearSpec(f"{self.name}.eg", self.d_model, self.d_ff, False, "moe", self.tt)
+
+    @property
+    def expert_up(self) -> LinearSpec:
+        return LinearSpec(f"{self.name}.eu", self.d_model, self.d_ff, False, "moe", self.tt)
+
+    @property
+    def expert_down(self) -> LinearSpec:
+        return LinearSpec(f"{self.name}.ed", self.d_ff, self.d_model, False, "moe", self.tt)
+
+    @property
+    def shared_spec(self) -> Optional[MLPSpec]:
+        if not self.n_shared:
+            return None
+        ff = self.shared_d_ff if self.shared_d_ff else self.n_shared * self.d_ff
+        return MLPSpec(f"{self.name}.shared", self.d_model, ff, self.kind, self.tt)
+
+
+def moe_init(rng: jax.Array, spec: MoESpec, dtype=jnp.float32) -> dict:
+    k_r, k_e, k_s = jax.random.split(rng, 3)
+    params: dict = {
+        "router": (
+            jax.random.normal(k_r, (spec.d_model, spec.n_experts)) * 0.02
+        ).astype(jnp.float32)  # router always fp32 for routing stability
+    }
+    # stacked expert params: vmap linear_init over the expert axis
+    ks = jax.random.split(k_e, spec.n_experts)
+    specs = [spec.expert_up, spec.expert_down]
+    names = ["eu", "ed"]
+    if spec.kind == "swiglu":
+        specs.append(spec.expert_gate)
+        names.append("eg")
+    for nm, ls in zip(names, specs):
+        params[nm] = jax.vmap(lambda k: linear_init(k, ls, dtype))(ks)
+    if spec.shared_spec is not None:
+        params["shared"] = mlp_init(k_s, spec.shared_spec, dtype)
+    return params
+
+
+def _expert_ffn(spec: MoESpec, eparams: dict, x: jax.Array) -> jax.Array:
+    """One expert's FFN on (capacity, d_model) — vmapped over experts."""
+    up = linear_apply(spec.expert_up, eparams["eu"], x)
+    if spec.kind == "swiglu":
+        gate = linear_apply(spec.expert_gate, eparams["eg"], x)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return linear_apply(spec.expert_down, eparams["ed"], h)
+
+
+def moe_apply(
+    spec: MoESpec, params: dict, x: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (y (B, S, D), aux_loss scalar).
+
+    aux_loss is the Switch/GShard load-balance loss
+    ``E * sum_e f_e * p_e`` (f = fraction of tokens routed to e,
+    p = mean router prob of e).
+    """
+    b, s, d = x.shape
+    E, K = spec.n_experts, spec.top_k
+    g = min(spec.router_group, b * s)
+    total = b * s
+    pad = (-total) % g
+    xf = x.reshape(total, d)
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad, d), x.dtype)], axis=0)
+    xg = xf.reshape(-1, g, d)                              # (G, g, D)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                # (G, g, E)
+    gate_vals, idx = jax.lax.top_k(probs, K)               # (G, g, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    cap = int(math.ceil(K * g * spec.capacity_factor / E))
+    cap = max(4, min(cap, g))
+
+    expert_oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (G, g, K, E)
+    # capacity slot: tokens claim slots in (token, choice) priority order
+    flat = expert_oh.reshape(-1, g * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                  # earlier claims
+    pos = pos.reshape(-1, g, K, E)
+    in_cap = jnp.sum(pos * expert_oh, axis=-1) < cap       # (G, g, K)
+    slot = jnp.sum(pos * expert_oh, axis=-1)               # (G, g, K)
+    keep = in_cap.astype(jnp.float32)
+    slot_oh = jax.nn.one_hot(slot.astype(jnp.int32), cap, dtype=jnp.float32)
+
+    # dispatch (G, g, E, C) = sum_k expert_oh * slot_oh * keep
+    dispatch = jnp.einsum(
+        "gtke,gtkc->gtec", expert_oh * keep[..., None], slot_oh
+    ).astype(x.dtype)
+    combine = jnp.einsum(
+        "gtke,gtkc->gtec",
+        expert_oh * (gate_vals * keep)[..., None],
+        slot_oh,
+    ).astype(jnp.float32)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)   # (G, E, C, D)
+    expert_in = shard(expert_in, "batch", None, None, None)
+    # (E, G*C, D): experts on the leading axis, vmapped
+    ein = expert_in.transpose(1, 0, 2, 3).reshape(E, -1, d)
+    eout = jax.vmap(lambda ep, xe: _expert_ffn(spec, ep, xe))(
+        {k: params[k] for k in ("eu", "ed", "eg") if k in params}, ein
+    )
+    expert_out = eout.reshape(E, -1, cap, d).transpose(1, 0, 2, 3)  # (G,E,C,D)
+    yg = jnp.einsum("gtec,gecd->gtd", combine, expert_out.astype(jnp.float32))
+    y = yg.reshape(-1, d)[:total].reshape(b, s, d).astype(x.dtype)
+
+    if spec.shared_spec is not None:
+        y = y + mlp_apply(spec.shared_spec, params["shared"], x)
+
+    # load-balance aux loss over real (unpadded) tokens
+    frac_tokens = jnp.mean(
+        jnp.sum(expert_oh * keep[..., None], axis=2).reshape(-1, E), axis=0
+    )
+    frac_probs = jnp.mean(probs.reshape(-1, E), axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

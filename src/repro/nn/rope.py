@@ -1,0 +1,51 @@
+"""Rotary position embeddings: standard, partial (GLM-style 2d), or none.
+
+``glm2d`` follows ChatGLM's scheme: rotary applied to the first half of
+each head dimension only (two interleaved rotary groups), the remainder
+passes through — captured here as a partial-rotary factor of 0.5.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, base: float = 10_000.0) -> jax.Array:
+    """Inverse frequencies for the rotated sub-dimension (even count)."""
+    half = head_dim // 2
+    return 1.0 / (base ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jax.Array,             # (..., seq, heads, head_dim)
+    positions: jax.Array,     # (..., seq)
+    *,
+    base: float = 10_000.0,
+    rotary_fraction: float = 1.0,
+) -> jax.Array:
+    """Rotate the first ``rotary_fraction`` of head_dim; pass the rest."""
+    head_dim = x.shape[-1]
+    rot_dim = int(head_dim * rotary_fraction)
+    rot_dim -= rot_dim % 2
+    if rot_dim == 0:
+        return x
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    inv_freq = rope_frequencies(rot_dim, base)          # (rot_dim/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., seq, rd/2)
+    angles = angles[..., None, :]                       # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+def rope_for(kind: str):
+    """kind in {"full", "glm2d", "none"} -> (fraction, base) or None."""
+    if kind == "none":
+        return None
+    if kind == "glm2d":
+        return (0.5, 10_000.0)
+    if kind == "full":
+        return (1.0, 10_000.0)
+    raise ValueError(f"unknown rope kind {kind!r}")

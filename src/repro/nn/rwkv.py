@@ -1,0 +1,246 @@
+"""RWKV-6 (Finch) block: data-dependent decay WKV, chunked for training.
+
+Time-mix: token-shift interpolation with data-dependent mix (ddlerp via a
+low-rank MLP), R/K/V/G projections, per-channel data-dependent decay
+``w_t`` (LoRA-conditioned), bonus ``u`` for the current token, grouped
+heads with per-head (key x value) state matrices.
+
+The WKV recurrence
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+is evaluated chunk-parallel (same decomposition as the SSD kernel: an
+intra-chunk lower-triangular attention term + an inter-chunk state scan),
+so training is GEMM-dominated; decode advances S one token at a time.
+
+Channel-mix: squared-ReLU MLP with token shift.  All projections route
+through ``repro.nn.linear`` — tensorizable like every other arch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+from .linear import LinearSpec, TTConfig, linear_apply, linear_init
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVSpec:
+    name: str
+    d_model: int
+    head_dim: int = 64
+    d_ff: Optional[int] = None          # channel-mix width (default 3.5x)
+    lora_r: int = 64                    # decay/mix LoRA rank
+    chunk: int = 16                     # see _wkv_chunked numerics bound
+    tt: Optional[TTConfig] = None
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+    @property
+    def ffn(self) -> int:
+        return self.d_ff if self.d_ff else int(3.5 * self.d_model)
+
+    def proj(self, tag: str, d_out: Optional[int] = None) -> LinearSpec:
+        return LinearSpec(
+            f"{self.name}.{tag}", self.d_model, d_out or self.d_model,
+            False, "attn", self.tt,
+        )
+
+
+class RWKVState(NamedTuple):
+    shift_tm: jax.Array   # (B, D) last token (time-mix shift)
+    shift_cm: jax.Array   # (B, D) last token (channel-mix shift)
+    wkv: jax.Array        # (B, H, N, N) per-head key->value state
+
+
+def rwkv_init(rng: jax.Array, spec: RWKVSpec, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 10)
+    d, r = spec.d_model, spec.lora_r
+    h, n = spec.n_heads, spec.head_dim
+
+    def lora(k, d_out):
+        k1, k2 = jax.random.split(k)
+        return {
+            "a": (jax.random.normal(k1, (d, r)) * 0.01).astype(dtype),
+            "b": (jax.random.normal(k2, (r, d_out)) * 0.01).astype(dtype),
+        }
+
+    return {
+        "mix_base": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dtype),
+        "mix_lora": lora(ks[1], 5 * d),
+        "wr": linear_init(ks[2], spec.proj("wr"), dtype),
+        "wk": linear_init(ks[3], spec.proj("wk"), dtype),
+        "wv": linear_init(ks[4], spec.proj("wv"), dtype),
+        "wg": linear_init(ks[5], spec.proj("wg"), dtype),
+        "wo": linear_init(ks[6], spec.proj("wo"), dtype),
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),  # w ~ exp(-exp(-6)) ~ .9975
+        "decay_lora": lora(ks[7], d),
+        "bonus": (jax.random.normal(ks[8], (h, n)) * 0.05).astype(jnp.float32),
+        "ln_x_scale": jnp.ones((d,), dtype),
+        # channel mix
+        "cm_mix": (jax.random.uniform(ks[9], (2, d)) * 0.5 + 0.25).astype(dtype),
+        "cm_k": linear_init(jax.random.fold_in(rng, 1), spec.proj("cmk", spec.ffn), dtype),
+        "cm_v": linear_init(jax.random.fold_in(rng, 2), spec.proj("cmv"), dtype),
+        "cm_r": linear_init(jax.random.fold_in(rng, 3), LinearSpec(
+            f"{spec.name}.cmr", spec.ffn, spec.d_model, False, "attn", spec.tt), dtype),
+    }
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]) -> jax.Array:
+    """Previous token per position; ``last`` fills position 0 (decode cache)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1, :])
+    else:
+        last = last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([last, x[:, :-1, :]], axis=1)
+
+
+def _wkv_chunked(
+    r: jax.Array,      # (B, S, H, N)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,   # (B, S, H, N) log-decay (< 0)
+    bonus: jax.Array,  # (H, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,   # (B, H, N, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunk-parallel WKV.  Returns (y (B,S,H,N), final_state).
+
+    Numerics: the intra-chunk factorisation
+    ``exp(cum_{i-1} - cum_j) = exp(cum_{i-1} - cum_mid) * exp(cum_mid - cum_j)``
+    is anchored at the chunk *midpoint*, so each factor's exponent is
+    bounded by ``(chunk/2) * |logw|``; with ``logw`` clamped at -7.5 and
+    chunk 16 the worst exponent is 60 < fp32's exp overflow (~88).  All
+    inter-chunk factors are boundary-anchored and always <= 1.
+    """
+    b, s, h, n = r.shape
+    l = min(chunk, s)
+    if s % l:
+        l = s
+    c = s // l
+    rc = r.reshape(b, c, l, h, n)
+    kc = k.reshape(b, c, l, h, n)
+    vc = v.reshape(b, c, l, h, n)
+    wc = logw.reshape(b, c, l, h, n)
+    cum = jnp.cumsum(wc, axis=2)                       # (b,c,l,h,n)
+    mid = cum[:, :, l // 2 : l // 2 + 1]               # midpoint anchor
+
+    # intra-chunk: y_i <- sum_{j<i} (r_i . exp(cum_{i-1}-cum_j) . k_j) v_j
+    r_intra = rc * jnp.exp(cum - wc - mid).astype(r.dtype)
+    k_intra = kc * jnp.exp(mid - cum).astype(r.dtype)
+    att = jnp.einsum("bcihn,bcjhn->bchij", r_intra, k_intra)
+    mask = jnp.tril(jnp.ones((l, l), bool), k=-1)       # strictly lower
+    att = jnp.where(mask[None, None, None], att, 0.0)
+    # diagonal bonus term: (r_i . u . k_i) v_i
+    diag = jnp.einsum("bcihn,hn,bcihn->bcih", rc, bonus.astype(r.dtype), kc)
+    y = jnp.einsum("bchij,bcjhn->bcihn", att.astype(r.dtype), vc)
+    y = y + diag[..., None] * vc
+
+    # inter-chunk: carry S; y_i += (r_i * exp(cum_{i-1})) @ S_prev
+    to_end = jnp.exp(cum[:, :, -1:, :, :] - cum)        # (b,c,l,h,n)
+    s_chunk = jnp.einsum(
+        "bclhn,bclhm->bchnm", (kc * to_end.astype(k.dtype)), vc
+    )                                                   # (b,c,h,n,m) key->value
+    total = cum[:, :, -1]                               # (b,c,h,n)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(carry, inp):
+        s_c, tot = inp
+        out = carry
+        carry = carry * jnp.exp(tot)[..., None] + s_c.astype(jnp.float32)
+        return carry, out
+
+    final, s_prev = jax.lax.scan(
+        step,
+        init_state,
+        (s_chunk.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2, 3)),
+    )
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)            # (b,c,h,n,m)
+    # inter-chunk read: r_i * exp(cum_{i-1}) (chunk-start anchored, <= 1)
+    r_inter = rc * jnp.exp(cum - wc).astype(r.dtype)
+    y = y + jnp.einsum("bcihn,bchnm->bcihm", r_inter, s_prev.astype(r.dtype))
+    return y.reshape(b, s, h, n), final
+
+
+def rwkv_time_mix(
+    spec: RWKVSpec,
+    params: dict,
+    x: jax.Array,                        # (B, S, D)
+    state: Optional[RWKVState] = None,
+) -> tuple[jax.Array, Optional[jax.Array], Optional[jax.Array]]:
+    """Returns (y, new_shift_tm, new_wkv_state)."""
+    b, s, d = x.shape
+    h, n = spec.n_heads, spec.head_dim
+    prev = _token_shift(x, state.shift_tm if state is not None else None)
+    delta = prev - x
+    # ddlerp: base mix + LoRA(x + 0.5*delta) -> 5 per-channel mixes
+    lo = jnp.tanh((x + 0.5 * delta) @ params["mix_lora"]["a"]) @ params["mix_lora"]["b"]
+    mixes = params["mix_base"][None, None] + lo.reshape(b, s, 5, d)
+    xr, xk, xv, xg, xw = [
+        x + delta * mixes[:, :, i, :] for i in range(5)
+    ]
+    r = linear_apply(spec.proj("wr"), params["wr"], xr).reshape(b, s, h, n)
+    k = linear_apply(spec.proj("wk"), params["wk"], xk).reshape(b, s, h, n)
+    v = linear_apply(spec.proj("wv"), params["wv"], xv).reshape(b, s, h, n)
+    g = jax.nn.silu(linear_apply(spec.proj("wg"), params["wg"], xg))
+    r = shard(r, "batch", "seq", "model", None)
+    k = shard(k, "batch", "seq", "model", None)
+    v = shard(v, "batch", "seq", "model", None)
+
+    dl = jnp.tanh(xw @ params["decay_lora"]["a"]) @ params["decay_lora"]["b"]
+    logw = -jnp.exp(
+        (params["decay_base"][None, None] + dl.astype(jnp.float32))
+    ).reshape(b, s, h, n)                                # log w_t < 0
+    # clamp: w >= e^-7.5 (full forget within ~2 steps anyway); keeps the
+    # chunked factorisation inside fp32 range — see _wkv_chunked numerics
+    logw = jnp.maximum(logw, -7.5)
+
+    init = state.wkv if state is not None else None
+    y, final = _wkv_chunked(r, k, v, logw, params["bonus"], spec.chunk, init)
+    y = y.reshape(b, s, d)
+    # per-head group norm (ln_x in the reference impl)
+    yg = y.reshape(b, s, h, n).astype(jnp.float32)
+    mu = jnp.mean(yg, axis=-1, keepdims=True)
+    var = jnp.var(yg, axis=-1, keepdims=True)
+    yg = (yg - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = (yg.reshape(b, s, d) * params["ln_x_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = linear_apply(spec.proj("wo"), params["wo"], y * g)
+    new_shift = x[:, -1, :] if state is not None else None
+    return shard(out, "batch", "seq", None), new_shift, (final if state is not None else None)
+
+
+def rwkv_channel_mix(
+    spec: RWKVSpec,
+    params: dict,
+    x: jax.Array,
+    state: Optional[RWKVState] = None,
+) -> tuple[jax.Array, Optional[jax.Array]]:
+    prev = _token_shift(x, state.shift_cm if state is not None else None)
+    delta = prev - x
+    xk = x + delta * params["cm_mix"][0][None, None]
+    xr = x + delta * params["cm_mix"][1][None, None]
+    kk = linear_apply(spec.proj("cmk", spec.ffn), params["cm_k"], xk)
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = linear_apply(
+        LinearSpec(f"{spec.name}.cmr", spec.ffn, spec.d_model, False, "attn", spec.tt),
+        params["cm_r"], kk,
+    )
+    rr = jax.nn.sigmoid(linear_apply(spec.proj("cmv"), params["cm_v"], xr))
+    new_shift = x[:, -1, :] if state is not None else None
+    return rr * vv, new_shift
+
+
+def init_rwkv_state(spec: RWKVSpec, batch: int, dtype=jnp.float32) -> RWKVState:
+    return RWKVState(
+        shift_tm=jnp.zeros((batch, spec.d_model), dtype),
+        shift_cm=jnp.zeros((batch, spec.d_model), dtype),
+        wkv=jnp.zeros((batch, spec.n_heads, spec.head_dim, spec.head_dim), jnp.float32),
+    )

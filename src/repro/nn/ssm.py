@@ -1,0 +1,209 @@
+"""Mamba2 (SSD) block: chunked selective-state-space scan + O(1) decode.
+
+Training/prefill uses the SSD chunked algorithm (Dao & Gu 2024): the
+sequence is split into chunks; within a chunk the recurrence is expanded
+into an attention-like lower-triangular form (MXU-friendly GEMMs), across
+chunks a short ``lax.scan`` carries the (heads, d_state, head_dim) state.
+Decode advances the state one token at a time — O(1) per token, which is
+why the hybrid/SSM archs run the ``long_500k`` shape that full-attention
+models skip.
+
+All projections route through ``repro.nn.linear`` and are tensorizable.
+n_groups is fixed at 1 (B/C shared across heads), matching Zamba2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+from .linear import LinearSpec, TTConfig, linear_apply, linear_init
+from .norms import rmsnorm, rmsnorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    name: str
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 128
+    tt: Optional[TTConfig] = None
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def d_in_proj(self) -> int:
+        # z, x, B, C, dt
+        return 2 * self.d_inner + 2 * self.d_state + self.n_heads
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+    @property
+    def in_spec(self) -> LinearSpec:
+        return LinearSpec(f"{self.name}.win", self.d_model, self.d_in_proj, False, "attn", self.tt)
+
+    @property
+    def out_spec(self) -> LinearSpec:
+        return LinearSpec(f"{self.name}.wout", self.d_inner, self.d_model, False, "attn", self.tt)
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, conv_channels) — trailing conv inputs
+    ssm: jax.Array    # (B, n_heads, d_state, head_dim)
+
+
+def ssm_init(rng: jax.Array, spec: SSMSpec, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 4)
+    h = spec.n_heads
+    # A in [1, 16) log-spaced (mamba2 default init)
+    a_init = jnp.log(1.0 + jnp.arange(h, dtype=jnp.float32) * 15.0 / max(h - 1, 1))
+    return {
+        "win": linear_init(ks[0], spec.in_spec, dtype),
+        "wout": linear_init(ks[1], spec.out_spec, dtype),
+        "conv_w": (jax.random.normal(ks[2], (spec.d_conv, spec.conv_channels)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((spec.conv_channels,), dtype),
+        "A_log": a_init,
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(spec.d_inner, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 history: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv1d.  x (B, S, C), w (K, C); history (B, K-1, C)
+    prepends cached inputs (decode) or zeros (prefill)."""
+    k = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def _ssd_chunked(
+    x: jax.Array,      # (B, S, H, P) — already scaled by dt
+    da: jax.Array,     # (B, S, H)    — log-decay increments (<= 0)
+    bmat: jax.Array,   # (B, S, N)
+    cmat: jax.Array,   # (B, S, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, N, P)
+) -> tuple[jax.Array, jax.Array]:
+    """SSD scan: y_t = C_t^T h_t,  h_t = exp(da_t) h_{t-1} + B_t x_t^T.
+
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    l = min(chunk, s)
+    if s > 8192:
+        l = min(l, 64)  # bound the (b,c,l,l,h) decay tensor at long context
+    if s % l:
+        l = s  # ragged fallback: single chunk
+    c = s // l
+    xc = x.reshape(b, c, l, h, p)
+    dac = da.reshape(b, c, l, h)
+    bc = bmat.reshape(b, c, l, n)
+    cc = cmat.reshape(b, c, l, n)
+
+    cum = jnp.cumsum(dac, axis=2)                       # (b, c, l, h)
+    # intra-chunk attention-like term.  Mask the exponent BEFORE exp: at
+    # masked (j > t) positions diff is large-positive, and exp-then-mask
+    # produces 0*inf = NaN in the backward pass.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,c,l,l,h)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -1e30)
+    decay = jnp.exp(diff)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)      # (b,c,l,l)
+    att = (scores[..., None] * decay).astype(x.dtype)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xc)
+
+    # chunk-boundary states
+    to_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (b,c,l,h)
+    s_chunk = jnp.einsum("bcln,bclh,bclhp->bchnp", bc, to_end.astype(x.dtype), xc)
+    total = cum[:, :, -1, :]                            # (b,c,h)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(carry, inp):
+        s_c, tot = inp                                  # (b,h,n,p), (b,h)
+        out = carry                                     # state BEFORE this chunk
+        carry = carry * jnp.exp(tot)[..., None, None] + s_c.astype(jnp.float32)
+        return carry, out
+
+    final, s_prev = jax.lax.scan(
+        step,
+        init_state,
+        (s_chunk.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)            # (b,c,h,n,p)
+
+    y_inter = jnp.einsum(
+        "bcln,bclh,bchnp->bclhp", cc, jnp.exp(cum).astype(x.dtype),
+        s_prev.astype(x.dtype),
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_apply(
+    spec: SSMSpec,
+    params: dict,
+    u: jax.Array,                       # (B, S, D)
+    state: Optional[SSMState] = None,
+) -> tuple[jax.Array, Optional[SSMState]]:
+    """Returns (y, new_state).  state given => decode (S small, usually 1)."""
+    b, s, _ = u.shape
+    h, p, n = spec.n_heads, spec.head_dim, spec.d_state
+    zxbcdt = linear_apply(spec.in_spec, params["win"], u)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [spec.d_inner, spec.d_inner + spec.conv_channels], axis=-1
+    )
+    conv_hist = state.conv if state is not None else None
+    xbc_conv = jax.nn.silu(
+        _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_hist)
+    )
+    x, bmat, cmat = jnp.split(xbc_conv, [spec.d_inner, spec.d_inner + n], axis=-1)
+    x = shard(x.reshape(b, s, h, p), "batch", "seq", "model", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,s,h)
+    da = -jnp.exp(params["A_log"])[None, None, :] * dt                # <= 0
+    xd = x * dt[..., None].astype(x.dtype)
+
+    init = state.ssm if state is not None else None
+    y, final = _ssd_chunked(xd, da, bmat, cmat, spec.chunk, init)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * x
+    y = y.reshape(b, s, spec.d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = linear_apply(spec.out_spec, params["wout"], y)
+
+    new_state = None
+    if state is not None:
+        k = spec.d_conv
+        hist = jnp.concatenate([state.conv, xbc], axis=1)[:, -(k - 1):, :]
+        new_state = SSMState(conv=hist, ssm=final)
+    return shard(out, "batch", "seq", None), new_state
+
+
+def init_ssm_state(spec: SSMSpec, batch: int, dtype=jnp.float32) -> SSMState:
+    return SSMState(
+        conv=jnp.zeros((batch, spec.d_conv - 1, spec.conv_channels), dtype),
+        ssm=jnp.zeros((batch, spec.n_heads, spec.d_state, spec.head_dim), jnp.float32),
+    )

@@ -1,0 +1,18 @@
+"""Optimizer substrate (pure JAX — no optax dependency)."""
+
+from .adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from .schedules import constant_schedule, cosine_schedule, linear_warmup_cosine
+from .grad_compress import (
+    CompressState,
+    compress_init,
+    compress_decompress,
+    int8_quantize,
+    int8_dequantize,
+)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "constant_schedule", "cosine_schedule", "linear_warmup_cosine",
+    "CompressState", "compress_init", "compress_decompress",
+    "int8_quantize", "int8_dequantize",
+]

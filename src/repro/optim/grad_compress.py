@@ -1,0 +1,62 @@
+"""INT8 error-feedback gradient compression (cross-pod link saver).
+
+The paper quantizes weights/activations/gradients to INT8 on the FPGA.
+Our distributed analogue compresses the *gradient all-reduce payload* on
+the slow cross-pod links: per-tensor symmetric INT8 quantization with an
+error-feedback residual (the quantization error is carried to the next
+step, so the compression is unbiased over time — Seide et al. 2014,
+Karimireddy et al. 2019).
+
+Inside a jitted train step, ``compress_decompress`` simulates the wire
+format: values round-trip through int8 before entering the optimizer,
+and the residual state is threaded alongside the optimizer state.  On a
+real multi-pod deployment the int8 payload is what crosses the DCI; the
+in-pod reduce-scatter stays bf16.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    residual: Any    # fp32 tree like grads
+
+
+def compress_init(params: Any) -> CompressState:
+    return CompressState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def int8_quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q int8, scale f32)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(
+    grads: Any, state: CompressState
+) -> tuple[Any, CompressState]:
+    """Error-feedback int8 round-trip of every gradient tensor."""
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = int8_quantize(g32)
+        deq = int8_dequantize(q, scale)
+        return deq.astype(g.dtype), g32 - deq
+
+    pairs = jax.tree.map(one, grads, state.residual)
+    new_grads = jax.tree.map(lambda t: t[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda t: t[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, CompressState(residual=new_res)

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (step -> lr, jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak_lr * (final_frac + (1.0 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(peak_lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(peak_lr, max(total_steps - warmup, 1), final_frac)
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        return jnp.where(step <= warmup, warm, cos(step - warmup))
+    return fn

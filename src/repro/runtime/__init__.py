@@ -1,0 +1,5 @@
+"""Runtime: fault tolerance, stragglers, elastic scaling."""
+
+from .fault import FaultTolerantLoop, PreemptionGuard, StragglerMonitor
+
+__all__ = ["FaultTolerantLoop", "PreemptionGuard", "StragglerMonitor"]

@@ -1,0 +1,107 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP over the production mesh).
+
+Models annotate activations with *logical* axes ("batch", "seq", "model",
+None); the launcher installs :class:`ShardingRules` mapping those to mesh
+axes.  With no rules installed (unit tests, single host), annotations are
+no-ops, so model code is mesh-agnostic.
+
+Resolution rules:
+  * "batch"  -> the data-parallel axes (('pod','data') multi-pod, ('data',))
+  * "model"  -> the tensor/expert-parallel axis
+  * "seq"    -> sequence-parallel axis (== model axis when SP is enabled)
+  * a dim is only sharded if its size divides the mesh-axes product —
+    otherwise it silently replicates (e.g. 2 KV heads on a 16-way TP axis).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    axis_sizes: dict          # mesh axis name -> size
+    batch_axes: tuple[str, ...] = ("data",)
+    model_axis: Optional[str] = "model"
+    seq_axis: Optional[str] = None        # set to model axis for SP
+    mesh: Optional[jax.sharding.Mesh] = None
+
+    def resolve(self, logical: Optional[str]) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        if logical == "batch":
+            return self.batch_axes
+        if logical == "model":
+            return (self.model_axis,) if self.model_axis else ()
+        if logical == "seq":
+            return (self.seq_axis,) if self.seq_axis else ()
+        if logical == "tokens":
+            # a flattened (batch x seq) dim: DP axes, plus the SP axis when
+            # sequence parallelism is on (b-major merge matches the layout)
+            seq = (self.seq_axis,) if self.seq_axis else ()
+            return self.batch_axes + tuple(a for a in seq if a not in self.batch_axes)
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def partition_spec(self, shape: Sequence[int], logical_axes: Sequence) -> P:
+        used: set[str] = set()
+        spec = []
+        for dim, logical in zip(shape, logical_axes):
+            axes = self.resolve(logical)
+            axes = tuple(a for a in axes if a not in used)
+            prod = math.prod(self.axis_sizes.get(a, 1) for a in axes)
+            if axes and prod > 1 and dim % prod == 0:
+                spec.append(axes if len(axes) > 1 else axes[0])
+                used.update(axes)
+            else:
+                spec.append(None)
+        return P(*spec)
+
+
+_tls = threading.local()
+
+
+def set_rules(rules: Optional[ShardingRules]) -> None:
+    _tls.rules = rules
+
+
+def get_rules() -> Optional[ShardingRules]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = get_rules()
+    set_rules(rules)
+    try:
+        yield
+    finally:
+        set_rules(prev)
+
+
+def shard(x: jax.Array, *logical_axes) -> jax.Array:
+    """Annotate ``x`` with a sharding constraint from logical axis names.
+
+    One logical name per dim: "batch" | "seq" | "model" | None.  No-op when
+    no rules are installed.
+    """
+    rules = get_rules()
+    if rules is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{len(logical_axes)} axes for rank-{x.ndim} array")
+    spec = rules.partition_spec(x.shape, logical_axes)
+    if rules.mesh is not None:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def named_sharding(rules: ShardingRules, shape: Sequence[int], logical_axes) -> NamedSharding:
+    assert rules.mesh is not None
+    return NamedSharding(rules.mesh, rules.partition_spec(shape, logical_axes))

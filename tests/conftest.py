@@ -1,0 +1,14 @@
+"""Shared test config.  NOTE: no global XLA device-count flags here —
+smoke tests and benches must see the real single CPU device; only the
+dry-run subprocess tests use forced host platform device counts."""
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

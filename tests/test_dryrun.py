@@ -1,0 +1,88 @@
+"""Dry-run machinery: collective parser (unit) + an 8-device end-to-end
+lower/compile in a subprocess (isolated XLA device-count flags)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.dryrun import collective_bytes, extrapolate
+from repro.configs import get_config
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_collective_parser_counts_output_shapes():
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[64]{0} all-reduce(%y), to_apply=%add
+  %rs = (f32[32]{0}, f32[32]{0}) reduce-scatter(%a, %b)
+  %cp = u32[2,2]{1,0} collective-permute(%c)
+  %notacoll = f32[999]{0} add(%a, %b)
+  %agsd = bf16[4]{0} all-gather-start(%q)
+  %agsd2 = bf16[4]{0} all-gather-done(%agsd)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 128 * 2 + 4 * 2   # start counted, done not
+    assert out["all-reduce"] == 64 * 4
+    assert out["reduce-scatter"] == 32 * 4 * 2
+    assert out["collective-permute"] == 2 * 2 * 4
+    assert out["total"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+
+
+def test_extrapolation_linear_families():
+    cfg = get_config("glm4-9b")   # 40 layers
+    vals = {"l1": 10.0, "l2": 13.0}
+    # base 7 + 40 * 3
+    assert abs(extrapolate(cfg, vals) - (7 + 40 * 3)) < 1e-9
+    cfg_h = get_config("zamba2-1.2b")  # 38 layers, attn_every 6
+    vals_h = {"m1": 8.0, "m2": 9.0, "g1": 7 + 6 * 1 + 2}
+    # base 7, mamba 1, attn 2, 6 groups
+    assert abs(extrapolate(cfg_h, vals_h) - (7 + 38 + 6 * 2)) < 1e-9
+    cfg_e = get_config("seamless-m4t-medium")  # 12 enc + 12 dec
+    vals_e = {"e1d1": 6.0, "e2d1": 8.0, "e1d2": 9.0}
+    # base 1, enc 2, dec 3
+    assert abs(extrapolate(cfg_e, vals_e) - (1 + 12 * 2 + 12 * 3)) < 1e-9
+
+
+@pytest.mark.slow
+def test_dryrun_8dev_smoke_cell(tmp_path):
+    """End-to-end: 8 fake devices, smoke config, one train cell lowers,
+    compiles, and reports memory/cost/collectives."""
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "chatglm3-6b", "--shape", "train_4k",
+         "--test-mesh", "--smoke", "--force",
+         "--out-dir", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=560,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.load(open(tmp_path / "chatglm3-6b_train_4k_testpod_tt.json"))
+    assert out["status"] == "ok"
+    assert out["cost"]["flops_per_device"] > 0
+    assert out["memory"]["temp_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_8dev_multipod_decode(tmp_path):
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "rwkv6-7b", "--shape", "decode_32k",
+         "--test-mesh", "--multi-pod", "--smoke", "--force", "--no-cost",
+         "--out-dir", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=560,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.load(open(tmp_path / "rwkv6-7b_decode_32k_testmultipod_tt.json"))
+    assert out["status"] == "ok"
+    assert out["mesh"].get("pod") == 2

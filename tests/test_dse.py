@@ -1,0 +1,71 @@
+"""Algorithm 1 (global latency-driven DSE) vs brute-force oracle."""
+
+from repro.core import (
+    ALL_DATAFLOWS,
+    FPGA_VU9P,
+    STRATEGY_SPACE,
+    TPU_V5E,
+    brute_force_search,
+    explore_model,
+    find_topk_paths,
+    global_search,
+    pareto_front,
+    tt_linear_network,
+)
+
+
+def _layer_paths(sizes):
+    nets = [tt_linear_network(*s) for s in sizes]
+    return [find_topk_paths(tn, k=3) for tn in nets]
+
+
+SIZES = [
+    (4, (4, 4), (4, 4), (4, 4, 4)),
+    (4, (2, 8), (8, 2), (4, 4, 4)),
+]
+
+
+def test_global_search_matches_brute_force():
+    lp = _layer_paths(SIZES)
+    res = global_search(lp, FPGA_VU9P)
+    bf = brute_force_search(lp, FPGA_VU9P)
+    assert abs(res.total_latency_s - bf) < 1e-12
+
+
+def test_strategy_constraint_honored():
+    lp = _layer_paths(SIZES)
+    res = global_search(lp, FPGA_VU9P)
+    allowed = set(STRATEGY_SPACE[res.strategy])
+    for choice in res.choices:
+        assert choice.partitioning in allowed
+
+
+def test_cost_table_complete():
+    lp = _layer_paths(SIZES)
+    res = global_search(lp, FPGA_VU9P)
+    parts = sorted({c for cs in STRATEGY_SPACE.values() for c in cs})
+    for l, paths in enumerate(lp):
+        for p in range(len(paths)):
+            for c in parts:
+                for d in ALL_DATAFLOWS:
+                    assert (l, p, c, d) in res.cost_table
+
+
+def test_explore_model_end_to_end():
+    nets = [tt_linear_network(*s) for s in SIZES]
+    res = explore_model(nets, TPU_V5E, top_k=2)
+    assert res.total_latency_s > 0
+    assert len(res.choices) == len(nets)
+
+
+def test_total_is_sum_of_choices():
+    lp = _layer_paths(SIZES)
+    res = global_search(lp, FPGA_VU9P)
+    assert abs(sum(res.per_layer_latency) - res.total_latency_s) < 1e-12
+
+
+def test_pareto_front():
+    pts = [(1.0, 5.0), (2.0, 1.0), (3.0, 4.0), (0.5, 6.0), (2.5, 0.5)]
+    front = pareto_front(pts)
+    assert 3 in front and 1 in front and 4 in front
+    assert 2 not in front  # dominated by (2.0, 1.0)

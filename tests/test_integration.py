@@ -1,0 +1,82 @@
+"""End-to-end integration: real training loop on a tiny TT LM —
+loss decreases, checkpoint/restart is bit-exact, serving works."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import make_pipeline
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.models import api
+from repro.optim import adamw_init, linear_warmup_cosine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tt-lm-100m", smoke=True).with_(vocab=128, n_layers=2,
+                                                     d_model=64, d_ff=128)
+    m = api(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    pipe = make_pipeline(cfg.vocab, seq_len=32, global_batch=4, seed=0)
+    step = jax.jit(make_train_step(cfg, lr=linear_warmup_cosine(1e-2, 5, 60)))
+    return cfg, m, params, pipe, step
+
+
+@pytest.mark.slow
+def test_training_reduces_loss(setup):
+    cfg, m, params, pipe, step = setup
+    opt = adamw_init(params)
+    losses = []
+    for i in range(60):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.2, (first, last)
+
+
+@pytest.mark.slow
+def test_checkpoint_restart_bit_exact(setup):
+    """Stateless data + checkpointing => restart reproduces the exact same
+    trajectory (the fault-tolerance contract)."""
+    cfg, m, params0, pipe, step = setup
+
+    def run(start_params, start_opt, a, b):
+        p, o = start_params, start_opt
+        for i in range(a, b):
+            batch = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+            p, o, _ = step(p, o, batch)
+        return p, o
+
+    opt0 = adamw_init(params0)
+    # straight run 0..8
+    p_direct, _ = run(params0, opt0, 0, 8)
+    # run 0..4, checkpoint, restore, run 4..8
+    p_mid, o_mid = run(params0, opt0, 0, 4)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(4, {"params": p_mid, "opt": o_mid})
+        _, restored = mgr.restore({"params": p_mid, "opt": o_mid})
+    p_resumed, _ = run(restored["params"], restored["opt"], 4, 8)
+    for a, b in zip(jax.tree.leaves(p_direct), jax.tree.leaves(p_resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serve_prefill_decode_roundtrip(setup):
+    cfg, m, params, pipe, step = setup
+    prefill = jax.jit(make_prefill_step(cfg, max_seq=16))
+    decode = jax.jit(make_decode_step(cfg))
+    toks = jnp.asarray(np.arange(8)[None, :] % cfg.vocab, jnp.int32)
+    logits, caches = prefill(params, {"tokens": toks})
+    for i in range(4):
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        logits, caches = decode(params, tok, caches,
+                                jnp.asarray(8 + i, jnp.int32))
+    assert logits.shape == (1, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))

@@ -1,0 +1,119 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per the assignment: sweep shapes/dtypes and assert_allclose against the
+ref.py oracle for every kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import find_topk_paths
+from repro.kernels import ops, ref
+from repro.kernels.streaming_tt import build_block_network, streaming_tt_linear
+
+DATAFLOWS = ("OS", "WS", "IS")
+
+
+@pytest.mark.parametrize("dataflow", DATAFLOWS)
+@pytest.mark.parametrize("shape", [
+    (32, 32, 32),        # single block
+    (64, 96, 32),        # multi-block K
+    (128, 64, 96),       # multi-block all dims
+    (33, 47, 65),        # ragged -> padded path
+    (1, 128, 128),       # degenerate M
+])
+def test_gemm_vs_ref_shapes(dataflow, shape):
+    m, k, n = shape
+    rng = np.random.default_rng(hash((dataflow, shape)) % 2**31)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    out = ops.gemm(a, b, dataflow=dataflow, block_m=32, block_k=32, block_n=32,
+                   interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.gemm_ref(a, b)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dataflow", DATAFLOWS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_dtypes(dataflow, dtype):
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.normal(size=(64, 64)), dtype)
+    b = jnp.asarray(rng.normal(size=(64, 64)), dtype)
+    out = ops.gemm(a, b, dataflow=dataflow, block_m=32, block_k=32, block_n=32,
+                   interpret=True)
+    expect = ref.gemm_ref(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 8e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dataflow", DATAFLOWS)
+def test_gemm_block_shape_independence(dataflow):
+    """Different BlockSpec tilings (the DSE's <T_M,T_K,T_N> axis) must not
+    change the numerics."""
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    outs = [
+        np.asarray(ops.gemm(a, b, dataflow=dataflow, block_m=bm, block_k=bk,
+                            block_n=bn, interpret=True))
+        for bm, bk, bn in [(32, 32, 32), (64, 32, 128), (128, 128, 128)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("in_modes,out_modes,rank", [
+    ((4, 4), (4, 4), 4),
+    ((4, 8), (8, 4), 8),
+    ((2, 4, 4), (4, 4, 2), 4),
+])
+def test_streaming_tt_vs_ref(in_modes, out_modes, rank):
+    block = 8
+    ranks = (rank,) * (len(in_modes) + len(out_modes) - 1)
+    tn = build_block_network(block, in_modes, out_modes, ranks)
+    path = find_topk_paths(tn, k=1)[0]
+    rng = np.random.default_rng(11)
+    cores = []
+    for node in tn.nodes:
+        if node.name == "X":
+            continue
+        cores.append(jnp.asarray(rng.normal(size=node.dims) * 0.3, jnp.float32))
+    tokens = 24
+    x = jnp.asarray(rng.normal(size=(tokens, int(np.prod(in_modes)))), jnp.float32)
+    out = ops.tt_linear(x, cores, tn, path, block_tokens=block, interpret=True)
+    expect = ref.tt_linear_ref(x, cores, tn, path)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_streaming_tt_all_topk_paths_agree():
+    """Every candidate contraction path computes the same function."""
+    block = 8
+    tn = build_block_network(block, (4, 4), (4, 4), (4, 4, 4))
+    paths = find_topk_paths(tn, k=4)
+    rng = np.random.default_rng(5)
+    cores = [jnp.asarray(rng.normal(size=n.dims) * 0.3, jnp.float32)
+             for n in tn.nodes if n.name != "X"]
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    outs = [np.asarray(ops.tt_linear(x, cores, tn, p, block_tokens=block,
+                                     interpret=True)) for p in paths]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_composes_with_jit_and_vmap_free_call():
+    """Kernels are forward primitives (training uses the jnp executor, so
+    autodiff never crosses pallas_call); they must compose with jit."""
+    a = jnp.ones((32, 32))
+    b = jnp.ones((32, 32))
+
+    @jax.jit
+    def f(a):
+        return jnp.sum(ops.gemm(a, b, dataflow="OS", block_m=32, block_k=32,
+                                block_n=32, interpret=True))
+
+    np.testing.assert_allclose(float(f(a)), 32.0 * 32 * 32, rtol=1e-6)

@@ -1,0 +1,269 @@
+"""NN substrate correctness: linear (dense/TT), embedding, attention,
+MoE, SSD, WKV — each against an independent reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tt_svd
+from repro.nn import (
+    AttentionSpec,
+    EmbeddingSpec,
+    LinearSpec,
+    MoESpec,
+    TTConfig,
+    attention_apply,
+    attention_init,
+    embedding_apply,
+    embedding_init,
+    head_apply,
+    init_kv_cache,
+    install_plan,
+    linear_apply,
+    linear_init,
+    moe_apply,
+    moe_init,
+)
+from repro.nn.rwkv import _wkv_chunked
+from repro.nn.ssm import _ssd_chunked
+
+TT = TTConfig(enabled=True, d=2, rank=64, min_dim=8,
+              targets=("attn", "mlp", "head", "moe", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+def test_tt_linear_matches_dense_with_svd_cores(rng):
+    """Load TT-SVD cores of a dense W into the layer: outputs must match
+    the dense matmul (full-rank TT == exact)."""
+    d_in, d_out = 16, 24
+    spec = LinearSpec("l", d_in, d_out, False, "mlp", TT)
+    assert spec.tensorized
+    w = rng.normal(size=(d_in, d_out)).astype(np.float32)
+    # layer contracts x (in_modes) against cores: W tensor (out_modes, in_modes)
+    tt = tt_svd(w.T, spec.out_modes, spec.in_modes, max_rank=64)
+    params = {}
+    for k, c in enumerate(tt.cores):
+        arr = jnp.asarray(c, jnp.float32)
+        if k == 0:
+            arr = arr[0]            # squeeze boundary rank
+        elif k == len(tt.cores) - 1:
+            arr = arr[..., 0]
+        params[f"core{k}"] = arr
+    x = jnp.asarray(rng.normal(size=(5, d_in)), jnp.float32)
+    y = linear_apply(spec, params, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) @ w, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_tt_linear_all_paths_equivalent(rng):
+    spec = LinearSpec("l2", 16, 16, False, "mlp", TT)
+    params = linear_init(jax.random.PRNGKey(0), spec)
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    outs = [np.asarray(linear_apply(spec, params, x, path_index=i))
+            for i in range(3)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-4)
+
+
+def test_install_plan_changes_selected_path(rng):
+    spec = LinearSpec("planned", 16, 16, False, "mlp", TT)
+    install_plan({"planned": 1})
+    from repro.nn.linear import planned_path_index
+    assert planned_path_index("planned") == 1
+    install_plan({})
+
+
+def test_linear_bias_and_dense(rng):
+    spec = LinearSpec("d", 8, 4, True, "mlp", None)
+    p = linear_init(jax.random.PRNGKey(1), spec)
+    x = jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)
+    y = linear_apply(spec, p, x)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x) @ np.asarray(p["w"]) + np.asarray(p["b"]),
+        rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _dense_table(spec, p):
+    vm = spec.vocab_modes
+    full = p["core0"]
+    for k in range(1, len(vm)):
+        full = jnp.einsum("...r,rvds->...vds", full, p[f"core{k}"])
+    full = full[0, ..., 0]
+    perm = [2 * i for i in range(len(vm))] + [2 * i + 1 for i in range(len(vm))]
+    return jnp.transpose(full, perm).reshape(spec.vocab, spec.d_model)
+
+
+@pytest.mark.parametrize("vocab,d_model", [(120, 24), (96, 32), (253, 16)])
+def test_tt_embedding_gather_and_head_exact(vocab, d_model, rng):
+    tt = TTConfig(enabled=True, d=3, rank=8, min_dim=1, targets=("embed",))
+    spec = EmbeddingSpec("e", vocab, d_model, tt)
+    p = embedding_init(jax.random.PRNGKey(2), spec)
+    table = _dense_table(spec, p)
+    ids = jnp.asarray(rng.integers(0, vocab, size=(4, 7)), jnp.int32)
+    emb = embedding_apply(spec, p, ids)
+    np.testing.assert_allclose(np.asarray(emb), np.asarray(table)[np.asarray(ids)],
+                               rtol=1e-5, atol=1e-5)
+    x = jnp.asarray(rng.normal(size=(4, 7, d_model)), jnp.float32)
+    logits = head_apply(spec, p, x)
+    expect = jnp.einsum("bsd,vd->bsv", x, table)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _naive_causal_attention(q, k, v):
+    b, s, h, d = q.shape
+    scores = np.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(d)
+    mask = np.tril(np.ones((s, s), bool))
+    scores = np.where(mask[None, None], scores, -1e30)
+    probs = np.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def test_attention_matches_naive(rng):
+    spec = AttentionSpec("a", d_model=16, n_heads=2, n_kv_heads=2, head_dim=8,
+                         rope="none", q_chunk=4)
+    p = attention_init(jax.random.PRNGKey(3), spec)
+    x = jnp.asarray(rng.normal(size=(2, 12, 16)), jnp.float32)
+    out, _ = attention_apply(spec, p, x)
+    q = np.asarray(x @ p["wq"]["w"]).reshape(2, 12, 2, 8)
+    k = np.asarray(x @ p["wk"]["w"]).reshape(2, 12, 2, 8)
+    v = np.asarray(x @ p["wv"]["w"]).reshape(2, 12, 2, 8)
+    expect = _naive_causal_attention(q, k, v).reshape(2, 12, 16) @ np.asarray(
+        p["wo"]["w"])
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-4, atol=1e-4)
+
+
+def test_gqa_decode_matches_prefill_continuation(rng):
+    spec = AttentionSpec("g", d_model=16, n_heads=4, n_kv_heads=2, head_dim=4,
+                         rope="full", q_chunk=8)
+    p = attention_init(jax.random.PRNGKey(4), spec)
+    x = jnp.asarray(rng.normal(size=(1, 9, 16)), jnp.float32)
+    full, _ = attention_apply(spec, p, x)
+    cache = init_kv_cache(spec, 1, 16, jnp.float32)
+    _, cache = attention_apply(spec, p, x[:, :8], cache=cache,
+                               cache_pos=jnp.asarray(0, jnp.int32))
+    dec, _ = attention_apply(spec, p, x[:, 8:9], cache=cache,
+                             cache_pos=jnp.asarray(8, jnp.int32))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, 8]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_attention_chunk_invariance(rng):
+    x = jnp.asarray(rng.normal(size=(1, 16, 16)), jnp.float32)
+    outs = []
+    for qc in (2, 4, 16):
+        spec = AttentionSpec("c", 16, 2, 2, 8, rope="none", q_chunk=qc)
+        p = attention_init(jax.random.PRNGKey(5), spec)
+        out, _ = attention_apply(spec, p, x)
+        outs.append(np.asarray(out))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def test_moe_full_capacity_equals_dense_mixture(rng):
+    spec = MoESpec("m", d_model=16, d_ff=32, n_experts=2, top_k=2, n_shared=0,
+                   capacity_factor=4.0, router_group=8)
+    p = moe_init(jax.random.PRNGKey(6), spec)
+    x = jnp.asarray(rng.normal(size=(1, 8, 16)), jnp.float32)
+    y, aux = moe_apply(spec, p, x)
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    pr = jax.nn.softmax(logits, -1)
+
+    def ffn(e, xx):
+        up = xx @ p["eu"]["w"][e]
+        gate = xx @ p["eg"]["w"][e]
+        return (jax.nn.silu(gate) * up) @ p["ed"]["w"][e]
+
+    expect = sum(pr[..., e:e + 1] * ffn(e, x) for e in range(2))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), rtol=1e-4,
+                               atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens(rng):
+    """With capacity 0-ish the output collapses toward zero (all dropped)."""
+    spec = MoESpec("m2", d_model=8, d_ff=16, n_experts=4, top_k=1, n_shared=0,
+                   capacity_factor=0.01, router_group=16)
+    p = moe_init(jax.random.PRNGKey(7), spec)
+    x = jnp.asarray(rng.normal(size=(1, 16, 8)), jnp.float32)
+    y, _ = moe_apply(spec, p, x)
+    spec_full = MoESpec("m2", d_model=8, d_ff=16, n_experts=4, top_k=1,
+                        n_shared=0, capacity_factor=8.0, router_group=16)
+    y_full, _ = moe_apply(spec_full, p, x)
+    assert float(jnp.sum(jnp.abs(y))) < float(jnp.sum(jnp.abs(y_full)))
+
+
+# ---------------------------------------------------------------------------
+# SSD / WKV recurrences vs sequential references
+# ---------------------------------------------------------------------------
+
+def _ssd_ref(x, da, B, C, init=None):
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    S = np.zeros((b, h, n, p)) if init is None else np.array(init)
+    ys = []
+    for t in range(s):
+        S = S * np.exp(np.array(da[:, t]))[:, :, None, None] + np.einsum(
+            "bn,bhp->bhnp", np.array(B[:, t]), np.array(x[:, t]))
+        ys.append(np.einsum("bn,bhnp->bhp", np.array(C[:, t]), S))
+    return np.stack(ys, 1), S
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 96])
+def test_ssd_chunked_vs_sequential(chunk, rng):
+    b, s, h, p, n = 2, 96, 3, 4, 5
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    da = jnp.asarray(-np.abs(rng.normal(size=(b, s, h))) * 0.3, jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    init = jnp.asarray(rng.normal(size=(b, h, n, p)), jnp.float32)
+    y, fin = _ssd_chunked(x, da, B, C, chunk=chunk, init_state=init)
+    yr, Sr = _ssd_ref(x, da, B, C, init)
+    np.testing.assert_allclose(np.asarray(y), yr, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fin), Sr, rtol=2e-4, atol=2e-4)
+
+
+def _wkv_ref(r, k, v, logw, u, init=None):
+    b, s, h, n = r.shape
+    S = np.zeros((b, h, n, n)) if init is None else np.array(init)
+    ys = []
+    for t in range(s):
+        kv = np.einsum("bhn,bhm->bhnm", np.array(k[:, t]), np.array(v[:, t]))
+        ys.append(np.einsum("bhn,bhnm->bhm", np.array(r[:, t]),
+                            S + np.array(u)[None, :, :, None] * kv))
+        S = np.exp(np.array(logw[:, t]))[..., None] * S + kv
+    return np.stack(ys, 1), S
+
+
+@pytest.mark.parametrize("decay_scale", [0.3, 7.0])
+def test_wkv_chunked_vs_sequential(decay_scale, rng):
+    b, s, h, n = 2, 64, 3, 4
+    r = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    logw = jnp.maximum(jnp.asarray(
+        -np.abs(rng.normal(size=(b, s, h, n))) * decay_scale, jnp.float32), -7.5)
+    u = jnp.asarray(rng.normal(size=(h, n)), jnp.float32)
+    init = jnp.asarray(rng.normal(size=(b, h, n, n)), jnp.float32)
+    y, fin = _wkv_chunked(r, k, v, logw, u, chunk=16, init_state=init)
+    yr, Sr = _wkv_ref(r, k, v, logw, u, init)
+    assert not np.any(np.isnan(np.asarray(y)))
+    np.testing.assert_allclose(np.asarray(y), yr, rtol=2e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(fin), Sr, rtol=2e-4, atol=5e-4)

@@ -1,0 +1,63 @@
+"""Logical-axis sharding rules (no devices needed — pure spec logic)."""
+
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import ShardingRules
+
+
+def rules(sp=False, multi=False):
+    axes = {"pod": 2, "data": 16, "model": 16} if multi else {"data": 16, "model": 16}
+    return ShardingRules(
+        axis_sizes=axes,
+        batch_axes=("pod", "data") if multi else ("data",),
+        model_axis="model",
+        seq_axis="model" if sp else None,
+    )
+
+
+def test_batch_and_model_resolution():
+    r = rules()
+    spec = r.partition_spec((256, 4096, 512), ("batch", None, "model"))
+    assert spec == P("data", None, "model")
+
+
+def test_indivisible_dim_replicates():
+    r = rules()
+    spec = r.partition_spec((10, 4096, 512), ("batch", None, "model"))
+    assert spec == P(None, None, "model")
+    spec = r.partition_spec((256, 4096, 10), ("batch", None, "model"))
+    assert spec == P("data", None, None)
+
+
+def test_seq_axis_off_means_replicated():
+    r = rules(sp=False)
+    spec = r.partition_spec((32, 4096, 512), ("batch", "seq", None))
+    assert spec == P("data", None, None)
+
+
+def test_sp_uses_model_once():
+    """With SP on, seq takes the model axis; heads cannot reuse it."""
+    r = rules(sp=True)
+    spec = r.partition_spec((32, 4096, 32, 128), ("batch", "seq", "model", None))
+    assert spec == P("data", "model", None, None)
+
+
+def test_multipod_batch_axes():
+    r = rules(multi=True)
+    spec = r.partition_spec((256, 4096), ("batch", None))
+    assert spec == P(("pod", "data"), None)
+
+
+def test_tokens_axis_merges_dp_and_sp():
+    r = rules(sp=True)
+    spec = r.partition_spec((256 * 4096, 16), ("tokens", None))
+    assert spec == P(("data", "model"), None)
+    r2 = rules(sp=False)
+    assert r2.partition_spec((1024, 16), ("tokens", None)) == P(("data",), None)
+
+
+def test_no_rules_installed_noop():
+    import jax.numpy as jnp
+    from repro.sharding import shard
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", None) is x

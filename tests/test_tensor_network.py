@@ -1,0 +1,114 @@
+"""Tensor-network representation invariants (unit + hypothesis)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GemmShape,
+    Node,
+    TensorNetwork,
+    dense_linear_network,
+    factorize,
+    tt_conv_network,
+    tt_linear_network,
+)
+
+
+def test_node_validation():
+    with pytest.raises(ValueError):
+        Node("a", ("x", "y"), (2,))
+    with pytest.raises(ValueError):
+        Node("a", ("x", "x"), (2, 2))
+
+
+def test_edge_dim_mismatch_rejected():
+    with pytest.raises(ValueError):
+        TensorNetwork([
+            Node("a", ("s",), (3,)),
+            Node("b", ("s",), (4,)),
+        ])
+
+
+def test_hyperedge_rejected():
+    with pytest.raises(ValueError):
+        TensorNetwork([
+            Node("a", ("s",), (3,)),
+            Node("b", ("s",), (3,)),
+            Node("c", ("s",), (3,)),
+        ])
+
+
+def test_contract_pair_gemm_shape():
+    tn = dense_linear_network(batch=8, n_in=16, n_out=32)
+    # nodes: W (j,i), X (b,j)
+    reduced, gemm = tn.contract_pair(0, 1)
+    assert gemm.K == 16
+    assert {gemm.M, gemm.N} == {32, 8}
+    assert gemm.macs == 8 * 16 * 32
+    assert len(reduced) == 1
+    assert set(reduced.nodes[0].edges) == {"b", "i"}
+
+
+def test_tt_linear_network_structure():
+    tn = tt_linear_network(4, (2, 3), (5, 7), (4, 4, 4))
+    assert len(tn) == 5  # 4 cores + X
+    out = tn.output_dims()
+    assert out["b"] == 4
+    assert out["i1"] == 5 and out["i2"] == 7
+    assert "j1" not in out  # input modes contracted
+
+
+def test_tt_conv_network_structure():
+    tn = tt_conv_network(10, (4, 4), (8, 8), 9, (4, 4, 4, 4))
+    out = tn.output_dims()
+    assert out["o1"] == 8 and out["o2"] == 8 and out["l"] == 10
+
+
+def test_gemm_sequence_full_contraction():
+    tn = tt_linear_network(4, (2, 2), (2, 2), (2, 2, 2))
+    # chain order: contract adjacent cores then input
+    path = [(0, 1), (0, 1), (0, 1), (0, 1)]
+    gemms = tn.gemm_sequence(path)
+    assert len(gemms) == 4
+    assert all(g.macs > 0 for g in gemms)
+
+
+def test_gemm_sequence_incomplete_path_raises():
+    tn = tt_linear_network(4, (2, 2), (2, 2), (2, 2, 2))
+    with pytest.raises(ValueError):
+        tn.gemm_sequence([(0, 1)])
+
+
+@given(st.integers(2, 10_000), st.integers(1, 4))
+@settings(max_examples=200, deadline=None)
+def test_factorize_properties(n, d):
+    f = factorize(n, d)
+    assert len(f) == d
+    assert math.prod(f) == n
+    assert list(f) == sorted(f, reverse=True)
+
+
+@given(
+    st.integers(1, 8),          # batch
+    st.lists(st.integers(2, 5), min_size=1, max_size=3),
+    st.lists(st.integers(2, 5), min_size=1, max_size=3),
+    st.integers(1, 6),          # rank
+)
+@settings(max_examples=50, deadline=None)
+def test_tt_network_output_dims_invariant(batch, in_modes, out_modes, rank):
+    ranks = (rank,) * (len(in_modes) + len(out_modes) - 1)
+    tn = tt_linear_network(batch, tuple(in_modes), tuple(out_modes), ranks)
+    out = tn.output_dims()
+    assert math.prod(d for e, d in out.items() if e != "b") == math.prod(out_modes)
+
+
+def test_state_key_order_independent():
+    # nodes: [G1, G2, G3, G4, X]; do {G1*G2, G4*X} in both orders
+    tn = tt_linear_network(4, (2, 2), (2, 2), (2, 2, 2))
+    a, _ = tn.contract_pair(0, 1)    # -> [G3, G4, X, G1G2]
+    a2, _ = a.contract_pair(1, 2)    # G4 * X
+    b, _ = tn.contract_pair(3, 4)    # -> [G1, G2, G3, G4X]
+    b2, _ = b.contract_pair(0, 1)    # G1 * G2
+    assert a2.state_key() == b2.state_key()

@@ -1,0 +1,61 @@
+"""TT-SVD decomposition + INT8 quantization."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TTMatrix, reconstruction_error, tt_rand, tt_svd
+from repro.core.tt import dequantize, quantize_int8
+
+
+def test_tt_svd_full_rank_exact(rng):
+    w = rng.normal(size=(24, 36))
+    tt = tt_svd(w, (4, 6), (6, 6), max_rank=1000)
+    assert reconstruction_error(tt, w) < 1e-10
+
+
+def test_tt_svd_truncated_monotone(rng):
+    w = rng.normal(size=(32, 32))
+    errs = [
+        reconstruction_error(tt_svd(w, (8, 4), (4, 8), max_rank=r), w)
+        for r in (1, 2, 4, 8, 16, 32)
+    ]
+    assert all(errs[i] >= errs[i + 1] - 1e-12 for i in range(len(errs) - 1))
+
+
+def test_tt_svd_low_rank_matrix_recovered(rng):
+    u = rng.normal(size=(64, 3))
+    v = rng.normal(size=(3, 64))
+    w = u @ v
+    tt = tt_svd(w, (8, 8), (8, 8), max_rank=16)
+    assert reconstruction_error(tt, w) < 1e-8
+
+
+def test_compression_ratio(rng):
+    w = rng.normal(size=(256, 256))
+    tt = tt_svd(w, (16, 16), (16, 16), max_rank=8)
+    assert tt.compression_ratio > 5
+    assert tt.n_params == sum(c.size for c in tt.cores)
+
+
+def test_tt_rand_rank_clipping():
+    rng = np.random.default_rng(0)
+    tt = tt_rand(rng, (4, 4), (4, 4), rank=100)
+    # interior ranks clipped to full-rank bounds
+    assert max(tt.ranks) <= 64
+    assert tt.to_matrix().shape == (16, 16)
+
+
+@given(st.integers(1, 200))
+@settings(max_examples=30, deadline=None)
+def test_int8_roundtrip_bounded(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(64,)).astype(np.float32) * rng.uniform(0.01, 100)
+    q, scale = quantize_int8(x)
+    err = np.abs(dequantize(q, scale) - x)
+    assert np.max(err) <= scale / 2 + 1e-6
+
+
+def test_int8_zero_tensor():
+    q, scale = quantize_int8(np.zeros(8, np.float32))
+    assert np.all(q == 0) and scale > 0

@@ -1,0 +1,53 @@
+"""The paper's own benchmark models (ResNet-18-TT, ViT-Ti/4) as
+contraction workloads + a mini end-to-end DSE over them."""
+
+import pytest
+
+from repro.core import FPGA_VU9P, explore_model, find_topk_paths
+from repro.models.vision import model_layers, resnet18_layers, vit_ti4_layers
+
+
+def test_resnet18_layer_inventory():
+    layers = resnet18_layers("cifar10")
+    # stem + 4 stages x 2 blocks x 2 convs + fc = 18
+    assert len(layers) == 18
+    for l in layers:
+        assert l.dense_macs > 0
+        out = l.tt_network.output_dims()
+        assert out  # has free edges
+
+
+def test_resnet18_tiny_imagenet_larger():
+    c = sum(l.dense_macs for l in resnet18_layers("cifar10"))
+    t = sum(l.dense_macs for l in resnet18_layers("tiny_imagenet"))
+    assert t > c  # 64x64 input -> more patches
+
+
+def test_vit_layer_inventory():
+    layers = vit_ti4_layers()
+    assert len(layers) == 12 * 4 + 1
+
+
+def test_tt_paths_cheaper_than_dense_reconstruction():
+    """TT contraction along the searched path must beat reconstructing W
+    for compressible conv layers (the compression premise, Table 3)."""
+    wins = 0
+    for l in resnet18_layers("cifar10")[4:10]:
+        best = find_topk_paths(l.tt_network, k=1)[0]
+        if best.macs < l.dense_macs:
+            wins += 1
+    assert wins >= 4
+
+
+def test_mini_dse_over_vit_layers():
+    nets = [l.tt_network for l in vit_ti4_layers(batch=1)[:4]]
+    res = explore_model(nets, FPGA_VU9P, top_k=2)
+    assert res.total_latency_s > 0
+    assert len(res.choices) == 4
+
+
+def test_model_layers_dispatch():
+    assert model_layers("resnet18", "cifar10")
+    assert model_layers("vit_ti4", "cifar10")
+    with pytest.raises(ValueError):
+        model_layers("alexnet", "cifar10")
