@@ -1,7 +1,9 @@
 """DSE search overhead — the paper claims "minimal overhead" for the
 hierarchical search vs brute force.  Times the three stages (top-K path
-search, cost-table fill, global argmin) per model and the brute-force
-alternative's combinatorial size.
+search, cost-table fill, global argmin) per model, reports the scalar
+per-cell oracle vs the batched NumPy cost-table engine side by side
+(``table_scalar_s`` / ``table_vectorized_s`` / ``table_speedup``), and
+the brute-force alternative's combinatorial size.
 """
 
 from __future__ import annotations
@@ -10,26 +12,47 @@ import time
 
 from repro.core import (
     ALL_DATAFLOWS,
+    ALL_PARTITIONINGS as ALL_PARTS,
     FPGA_VU9P,
     STRATEGY_SPACE,
+    build_cost_tables,
     find_topk_paths,
     global_search,
 )
+from repro.core.dse import build_cost_table
+from repro.dse_cli import model_dse_layers
+from repro.configs import get_config
 from repro.models.vision import model_layers
 from .common import emit
 
 
+def _workloads():
+    for model, dataset in [("resnet18", "cifar10"), ("vit_ti4", "cifar10")]:
+        nets = [l.tt_network for l in model_layers(model, dataset, batch=1)]
+        yield f"{model}/{dataset}", nets
+    nets = [tn for _, tn in model_dse_layers(get_config("tt-lm-100m"), tokens=1024)]
+    yield "tt-lm-100m", nets
+
+
 def run() -> list[dict]:
     rows = []
-    for model, dataset in [("resnet18", "cifar10"), ("vit_ti4", "cifar10")]:
-        layers = model_layers(model, dataset, batch=1)
+    for name, nets in _workloads():
         t0 = time.perf_counter()
-        layer_paths = [find_topk_paths(l.tt_network, k=4) for l in layers]
+        layer_paths = [find_topk_paths(tn, k=4) for tn in nets]
         t_paths = time.perf_counter() - t0
+
         t0 = time.perf_counter()
-        res = global_search(layer_paths, FPGA_VU9P)
-        t_search = time.perf_counter() - t0
-        per_layer = max(len(p) for p in layer_paths) * 3 * 3  # p x c x d
+        scalar = build_cost_table(layer_paths, FPGA_VU9P, ALL_PARTS,
+                                  engine="scalar")
+        t_scalar = time.perf_counter() - t0
+        tables = build_cost_tables(layer_paths, FPGA_VU9P, ALL_PARTS)
+        assert tables.seconds == scalar  # engines must agree bit-for-bit
+
+        t0 = time.perf_counter()
+        res = global_search(layer_paths, FPGA_VU9P, table=tables.seconds)
+        t_argmin = time.perf_counter() - t0
+        assert res.total_latency_s > 0
+
         brute = 0
         for h, cs in STRATEGY_SPACE.items():
             combo = 1
@@ -37,12 +60,18 @@ def run() -> list[dict]:
                 combo *= len(p) * len(cs) * len(ALL_DATAFLOWS)
             brute += combo
         rows.append({
-            "model": f"{model}/{dataset}",
-            "layers": len(layers),
+            "model": name,
+            "layers": len(nets),
             "path_search_s": t_paths,
-            "table_plus_argmin_s": t_search,
+            "table_scalar_s": t_scalar,
+            "table_vectorized_s": tables.build_seconds,
+            "table_speedup": t_scalar / tables.build_seconds,
+            "argmin_s": t_argmin,
+            "table_cells": tables.n_cells,
+            "unique_gemm_evals": tables.n_unique_gemm_evals,
             "hierarchical_evals": sum(
-                len(p) * 3 * 3 for p in layer_paths),
+                len(p) * len(ALL_PARTS) * len(ALL_DATAFLOWS)
+                for p in layer_paths),
             "brute_force_combos": float(brute),
         })
     emit("bench_dse_overhead", rows)

@@ -9,12 +9,15 @@ choices vary per model/mode — the same distributions are reported here.
 Training mode approximates the backward pass as the forward contraction
 set at 3x the token count (dL/dX and dL/dW have forward-like shapes) —
 an explicit, documented modelling choice.
+
+Distributions are derived from the ``repro.dse`` CLI's JSON report
+(``repro.dse_cli.run_dse``), so this benchmark exercises the same
+end-to-end pipeline as ``python -m repro.dse --arch resnet18/cifar10``.
 """
 
 from __future__ import annotations
 
-from repro.core import STRATEGY_SPACE, FPGA_VU9P, find_topk_paths, global_search
-from repro.models.vision import model_layers
+from repro.dse_cli import run_dse
 from .common import emit
 
 MODELS = [
@@ -24,35 +27,30 @@ MODELS = [
 ]
 
 
-def _dse(model, dataset, batch):
-    layers = model_layers(model, dataset, batch=batch)
-    layer_paths = [find_topk_paths(l.tt_network, k=4) for l in layers]
-    return global_search(layer_paths, FPGA_VU9P), layer_paths
-
-
 def run() -> list[dict]:
     rows = []
     for model, dataset in MODELS:
         for mode, batch in (("inference", 1), ("training", 3)):
-            res, _ = _dse(model, dataset, batch)
-            n = len(res.choices)
-            path1 = sum(1 for c in res.choices if c.path_index == 0)
-            split = sum(1 for c in res.choices if c.partitioning != (1, 1))
+            report = run_dse(f"{model}/{dataset}", top_k=4, tokens=batch)
+            layers = report["layers"]
+            n = len(layers)
+            path1 = sum(1 for l in layers if l["mac_optimal_path"])
+            split = sum(1 for l in layers if l["partitioning"] != [1, 1])
             dfs = {d: 0 for d in ("IS", "OS", "WS")}
-            for c in res.choices:
-                dfs[c.dataflow.value] += 1
+            for l in layers:
+                dfs[l["dataflow"]] += 1
             rows.append({
                 "model": model,
                 "dataset": dataset,
                 "mode": mode,
-                "strategy": res.strategy,
+                "strategy": report["strategy"],
                 "split_pct": 100.0 * split / n,
                 "path1_pct": 100.0 * path1 / n,
                 "pathk_pct": 100.0 * (n - path1) / n,
                 "IS_pct": 100.0 * dfs["IS"] / n,
                 "OS_pct": 100.0 * dfs["OS"] / n,
                 "WS_pct": 100.0 * dfs["WS"] / n,
-                "total_latency_ms": res.total_latency_s * 1e3,
+                "total_latency_ms": report["total_latency_s"] * 1e3,
             })
     emit("table2_dse_choices", rows)
     return rows

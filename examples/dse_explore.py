@@ -1,8 +1,12 @@
-"""Reproduce the paper's Fig. 3 story on a tensorized ViT-Ti/4 layer:
-reconstruction vs MAC-optimal vs latency-optimal contraction orders.
+"""Reproduce the paper's Fig. 3 story on a tensorized ViT-Ti/4 layer
+(reconstruction vs MAC-optimal vs latency-optimal contraction orders),
+then run the full model-level DSE via the ``repro.dse`` CLI machinery
+and summarise its JSON report.
 
   PYTHONPATH=src python examples/dse_explore.py
 """
+
+from collections import Counter
 
 from repro.core import (
     ALL_DATAFLOWS,
@@ -12,6 +16,7 @@ from repro.core import (
     layer_latency,
     reconstruction_path,
 )
+from repro.dse_cli import run_dse
 from repro.models.vision import vit_ti4_layers
 
 
@@ -45,6 +50,22 @@ def main():
         print(f"-> the latency-optimal path has {p_best.macs / paths[0].macs:.2f}x "
               f"the MACs but {100 * (1 - lat_best / lat_m):.0f}% lower latency "
               f"(the paper's Fig. 3 observation)")
+
+    # model-level DSE: same report as `python -m repro.dse --arch tt-lm-100m`
+    report = run_dse("tt-lm-100m", top_k=4)
+    print(f"\n[tt-lm-100m] strategy={report['strategy']}  "
+          f"total={report['total_latency_s'] * 1e3:.2f} ms  "
+          f"({report['n_layers']} tensorized projections)")
+    t = report["timings"]
+    print(f"  path search {t['path_search_s'] * 1e3:.1f} ms, "
+          f"cost table {t['table_build_s'] * 1e3:.1f} ms "
+          f"({report['table']['n_unique_gemm_evals']} unique GEMM evals "
+          f"for {report['table']['n_cells']} cells), "
+          f"argmin {t['argmin_s'] * 1e3:.1f} ms")
+    dfs = Counter(l["dataflow"] for l in report["layers"])
+    non_mac = sum(1 for l in report["layers"] if not l["mac_optimal_path"])
+    print(f"  dataflows {dict(dfs)}; {non_mac}/{report['n_layers']} layers "
+          f"pick a non-MAC-optimal path")
 
 
 if __name__ == "__main__":

@@ -28,10 +28,16 @@ from .simulator import (
     simulate,
 )
 from .tpu_cost import TPU_V5E
+from .cost_table import (
+    CostTables,
+    build_cost_table_vectorized,
+    build_cost_tables,
+)
 from .dse import (
     DSEResult,
     LayerChoice,
     brute_force_search,
+    build_cost_table,
     explore_model,
     global_search,
     pareto_front,
@@ -46,6 +52,8 @@ __all__ = [
     "ALL_DATAFLOWS", "ALL_PARTITIONINGS", "STRATEGY_SPACE", "Dataflow",
     "FPGA_VU9P", "HardwareConfig", "Partitioning", "gemm_latency",
     "layer_latency", "simulate", "TPU_V5E",
+    "CostTables", "build_cost_table", "build_cost_table_vectorized",
+    "build_cost_tables",
     "DSEResult", "LayerChoice", "brute_force_search", "explore_model",
     "global_search", "pareto_front",
     "TTMatrix", "reconstruction_error", "tt_rand", "tt_svd",

@@ -1,0 +1,241 @@
+"""Batched cost-table engine — Algorithm 1 line 2, vectorized.
+
+``dse.build_cost_table`` populates ``T[l, p, c, d]`` over every (layer,
+path, partitioning, dataflow) tuple.  The scalar engine calls
+``simulate()`` once per cell: a Python quadruple loop that re-walks each
+path's dependency structure and re-evaluates each GEMM for every cell.
+This module replaces it with three passes that exploit the structure of
+the space:
+
+1. **Dedup.** Candidate paths of the same layer share most GEMM shapes,
+   identical layers repeat across the model (transformer stacks), and a
+   split partitioning evaluates every GEMM on the same half-core geometry
+   — so the set of *unique* ``(M, K, N, R, C)`` evaluations is far
+   smaller than ``L x P x C x D x steps``.  Layers with identical
+   candidate-path sets collapse to one representative.
+2. **Batch evaluation.** All unique rows go through the shared
+   closed-form model (``simulator.gemm_cost_model``) as int64 arrays —
+   one vectorized NumPy evaluation per dataflow instead of per-cell
+   Python calls.
+3. **Assembly.** Each (path, partitioning) is compiled once into a short
+   program of ``seq`` / ``pair`` / ``joint`` ops over registry row ids
+   (mirroring ``simulator.layer_latency``'s scheduling exactly), then
+   replayed with gather views vectorized over the dataflow axis.  The
+   accumulation order matches the scalar oracle op for op, so the table
+   is bit-identical to ``simulate()``.
+
+The engine also returns per-cell DRAM traffic and per-path MACs, which
+the ``repro.dse`` CLI combines into the energy-delay-product objective.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .paths import CandidatePath
+from .simulator import (
+    ALL_DATAFLOWS,
+    ALL_PARTITIONINGS,
+    Dataflow,
+    HardwareConfig,
+    Partitioning,
+    _dependency_levels,
+    _split_gemm,
+    gemm_cost_model,
+)
+
+#: cost-table key — (layer, path_index, partitioning, dataflow)
+Key = tuple[int, int, Partitioning, Dataflow]
+
+# ---------------------------------------------------------------------------
+# energy constants for the EDP objective (rough INT8-era figures: a MAC is
+# ~0.3 pJ in 16 nm, DRAM access ~15 pJ/byte — the *ratio* is what steers
+# the argmin, and it matches the common "DRAM is ~50-100x a MAC" rule)
+# ---------------------------------------------------------------------------
+MAC_ENERGY_J = 0.3e-12
+DRAM_ENERGY_J_PER_BYTE = 15e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class CostTables:
+    """Vectorized build output: the latency table plus EDP ingredients."""
+
+    seconds: dict[Key, float]
+    traffic_words: dict[Key, float]
+    macs: dict[tuple[int, int], int]  # (l, p) -> total path MACs
+    build_seconds: float
+    n_cells: int
+    n_unique_gemm_evals: int
+    n_unique_layers: int
+
+    def energy_joules(self, key: Key, hw: HardwareConfig) -> float:
+        """Energy of one configuration under the simple MAC+DRAM model."""
+        return (
+            self.macs[key[:2]] * MAC_ENERGY_J
+            + self.traffic_words[key] * hw.bytes_per_word * DRAM_ENERGY_J_PER_BYTE
+        )
+
+    def edp(self, hw: HardwareConfig) -> dict[Key, float]:
+        """Energy-delay product table over the same keys as ``seconds``."""
+        return {
+            k: s * self.energy_joules(k, hw) for k, s in self.seconds.items()
+        }
+
+
+class _GemmRegistry:
+    """Deduplicated (M, K, N, R, C) rows, batch-evaluated per dataflow."""
+
+    def __init__(self) -> None:
+        self._index: dict[tuple[int, int, int, int, int], int] = {}
+        self.rows: list[tuple[int, int, int, int, int]] = []
+
+    def add(self, M: int, K: int, N: int, R: int, C: int) -> int:
+        key = (M, K, N, R, C)
+        idx = self._index.get(key)
+        if idx is None:
+            idx = len(self.rows)
+            self._index[key] = idx
+            self.rows.append(key)
+        return idx
+
+    def evaluate(
+        self, dataflows: Sequence[Dataflow], hw: HardwareConfig
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(cycles, traffic_words) as [n_rows, n_dataflows] float64."""
+        rows = np.asarray(self.rows, dtype=np.int64).reshape(-1, 5)
+        M, K, N, R, C = (rows[:, i] for i in range(5))
+        cyc = np.empty((rows.shape[0], len(dataflows)))
+        tra = np.empty_like(cyc)
+        for d_idx, df in enumerate(dataflows):
+            cycles, _, traffic = gemm_cost_model(M, K, N, df, R, C, hw)
+            cyc[:, d_idx] = cycles
+            tra[:, d_idx] = traffic
+        return cyc, tra
+
+
+# one compiled op: ("seq", row) | ("pair", row_a, row_b) | ("joint", row)
+_Program = list[tuple]
+
+
+def _compile_path(
+    path: CandidatePath,
+    part: Partitioning,
+    hw: HardwareConfig,
+    reg: _GemmRegistry,
+) -> _Program:
+    """Compile one (path, partitioning) into registry-id ops.
+
+    Mirrors ``simulator.layer_latency``: monolithic runs GEMMs in path
+    order on the full array; split pairs up independent GEMMs per
+    dependency level on the half-cores, leftovers run jointly on a
+    dimension-split shape.
+    """
+    gemms = path.gemms
+    if part == (1, 1):
+        R, C = hw.pe_rows, hw.pe_cols
+        return [("seq", reg.add(g.M, g.K, g.N, R, C)) for g in gemms]
+    rsplit, csplit = part
+    R, C = hw.pe_rows // rsplit, hw.pe_cols // csplit
+    ops: _Program = []
+    for level in _dependency_levels(path, len(path.steps) + 1):
+        idx = 0
+        while idx + 1 < len(level):
+            ga, gb = gemms[level[idx]], gemms[level[idx + 1]]
+            ops.append(
+                ("pair", reg.add(ga.M, ga.K, ga.N, R, C),
+                 reg.add(gb.M, gb.K, gb.N, R, C))
+            )
+            idx += 2
+        if idx < len(level):
+            h = _split_gemm(gemms[level[idx]], part)
+            ops.append(("joint", reg.add(h.M, h.K, h.N, R, C)))
+    return ops
+
+
+def _layer_key(paths: Sequence[CandidatePath]) -> tuple:
+    """Identity of a layer's DSE subproblem: path structure + GEMM shapes."""
+    return tuple(
+        (p.steps, tuple(g.as_tuple() for g in p.gemms)) for p in paths
+    )
+
+
+def build_cost_tables(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    hw: HardwareConfig,
+    partitionings: Sequence[Partitioning] = ALL_PARTITIONINGS,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+) -> CostTables:
+    """Populate T[l, p, c, d] (plus traffic/MACs) with batched evaluation."""
+    t0 = time.perf_counter()
+    partitionings = tuple(partitionings)
+    dataflows = tuple(dataflows)
+
+    # pass 1 — dedup layers and compile programs over the shared registry
+    unique_layers: dict[tuple, list[int]] = {}
+    for l, paths in enumerate(layer_paths):
+        unique_layers.setdefault(_layer_key(paths), []).append(l)
+    reg = _GemmRegistry()
+    programs: dict[tuple, list[dict[Partitioning, _Program]]] = {}
+    for key, members in unique_layers.items():
+        paths = layer_paths[members[0]]
+        programs[key] = [
+            {part: _compile_path(path, part, hw, reg) for part in partitionings}
+            for path in paths
+        ]
+
+    # pass 2 — one vectorized model evaluation per dataflow
+    cyc, tra = reg.evaluate(dataflows, hw)
+
+    # pass 3 — replay programs (vectorized over dataflows, scalar-ordered
+    # accumulation so results are bit-identical to the sequential oracle)
+    seconds: dict[Key, float] = {}
+    traffic: dict[Key, float] = {}
+    macs: dict[tuple[int, int], int] = {}
+    for key, members in unique_layers.items():
+        paths = layer_paths[members[0]]
+        for p_idx, per_part in enumerate(programs[key]):
+            for part, prog in per_part.items():
+                tot_c = np.zeros(len(dataflows))
+                tot_t = np.zeros(len(dataflows))
+                for op in prog:
+                    if op[0] == "seq":
+                        tot_c = tot_c + cyc[op[1]]
+                        tot_t = tot_t + tra[op[1]]
+                    elif op[0] == "pair":
+                        tot_c = tot_c + np.maximum(cyc[op[1]], cyc[op[2]])
+                        tot_t = tot_t + (tra[op[1]] + tra[op[2]])
+                    else:  # joint: both half-cores stream the split GEMM
+                        tot_c = tot_c + cyc[op[1]]
+                        tot_t = tot_t + 2.0 * tra[op[1]]
+                secs = tot_c / hw.freq_hz
+                for d_idx, d in enumerate(dataflows):
+                    s, t = float(secs[d_idx]), float(tot_t[d_idx])
+                    for l in members:
+                        seconds[(l, p_idx, part, d)] = s
+                        traffic[(l, p_idx, part, d)] = t
+            for l in members:
+                macs[(l, p_idx)] = paths[p_idx].macs
+
+    return CostTables(
+        seconds=seconds,
+        traffic_words=traffic,
+        macs=macs,
+        build_seconds=time.perf_counter() - t0,
+        n_cells=len(seconds),
+        n_unique_gemm_evals=len(reg.rows),
+        n_unique_layers=len(unique_layers),
+    )
+
+
+def build_cost_table_vectorized(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    hw: HardwareConfig,
+    partitionings: Sequence[Partitioning] = ALL_PARTITIONINGS,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+) -> dict[Key, float]:
+    """Drop-in replacement for the scalar ``dse.build_cost_table`` loop."""
+    return build_cost_tables(layer_paths, hw, partitionings, dataflows).seconds

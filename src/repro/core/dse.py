@@ -60,8 +60,27 @@ def build_cost_table(
     partitionings: Sequence[Partitioning],
     dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
     simulate_fn: Callable[[CandidatePath, Partitioning, Dataflow, HardwareConfig], float] = simulate,
+    engine: str = "auto",
 ) -> dict[tuple[int, int, Partitioning, Dataflow], float]:
-    """T[l, p, c, d] <- Simulate(p, c, d) for all valid configs (Alg. 1, l.2)."""
+    """T[l, p, c, d] <- Simulate(p, c, d) for all valid configs (Alg. 1, l.2).
+
+    ``engine="vectorized"`` uses the batched NumPy engine
+    (``repro.core.cost_table``), bit-identical to the scalar loop;
+    ``"scalar"`` forces the per-cell oracle; ``"auto"`` picks the
+    vectorized engine whenever the default ``simulate`` oracle is in use
+    (a custom ``simulate_fn`` must go through the scalar loop).
+    """
+    if engine not in ("auto", "scalar", "vectorized"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "vectorized" and simulate_fn is not simulate:
+        raise ValueError(
+            "engine='vectorized' evaluates the built-in closed-form model; "
+            "a custom simulate_fn requires engine='scalar'"
+        )
+    if engine == "vectorized" or (engine == "auto" and simulate_fn is simulate):
+        from .cost_table import build_cost_table_vectorized
+
+        return build_cost_table_vectorized(layer_paths, hw, partitionings, dataflows)
     table: dict[tuple[int, int, Partitioning, Dataflow], float] = {}
     for l, paths in enumerate(layer_paths):
         for p_idx, path in enumerate(paths):
@@ -77,10 +96,20 @@ def global_search(
     strategy_space: Mapping[str, Sequence[Partitioning]] = STRATEGY_SPACE,
     dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
     simulate_fn: Callable[[CandidatePath, Partitioning, Dataflow, HardwareConfig], float] = simulate,
+    engine: str = "auto",
+    table: Mapping[tuple[int, int, Partitioning, Dataflow], float] | None = None,
 ) -> DSEResult:
-    """Algorithm 1: global strategy loop + independent per-layer argmins."""
+    """Algorithm 1: global strategy loop + independent per-layer argmins.
+
+    ``table`` may supply a pre-built cost table (any per-config objective,
+    e.g. the EDP table from ``cost_table.CostTables.edp``); by default the
+    latency table is built with the selected ``engine``.
+    """
     all_parts = sorted({c for cs in strategy_space.values() for c in cs})
-    table = build_cost_table(layer_paths, hw, all_parts, dataflows, simulate_fn)
+    if table is None:
+        table = build_cost_table(
+            layer_paths, hw, all_parts, dataflows, simulate_fn, engine
+        )
 
     best_cost = float("inf")
     best: tuple[str, tuple[LayerChoice, ...]] | None = None
@@ -141,10 +170,11 @@ def explore_model(
     top_k: int = 4,
     strategy_space: Mapping[str, Sequence[Partitioning]] = STRATEGY_SPACE,
     dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+    engine: str = "auto",
 ) -> DSEResult:
     """End-to-end DSE for a model given per-layer tensor networks."""
     layer_paths = [find_topk_paths(tn, k=top_k) for tn in networks]
-    return global_search(layer_paths, hw, strategy_space, dataflows)
+    return global_search(layer_paths, hw, strategy_space, dataflows, engine=engine)
 
 
 def pareto_front(points: Sequence[tuple[float, float]]) -> list[int]:

@@ -24,6 +24,8 @@ import enum
 import math
 from typing import Sequence
 
+import numpy as np
+
 from .paths import CandidatePath
 from .tensor_network import GemmShape
 
@@ -83,15 +85,82 @@ class GemmReport:
     utilization: float  # MACs / (cycles * array MACs/cycle)
 
 
-def _reads(operand_words: int, reuse_folds: int, sram_bytes: int, bpw: int) -> float:
+def _cdiv(a, b):
+    """Exact ceil-division; elementwise over Python ints or integer ndarrays."""
+    return -(-a // b)
+
+
+def _reads(operand_words, reuse_folds, hw: HardwareConfig):
     """DRAM words read for an operand reused across ``reuse_folds`` passes.
 
     If the operand fits on-chip it is read once; otherwise every pass
     re-streams it (double-buffered, so no write-back cost for read operands).
+    Elementwise over Python ints or integer ndarrays.
     """
-    if operand_words * bpw <= sram_bytes:
-        return float(operand_words)
-    return float(operand_words) * reuse_folds
+    if isinstance(operand_words, np.ndarray):
+        return np.where(
+            operand_words * hw.bytes_per_word <= hw.sram_input_bytes,
+            operand_words,
+            operand_words * reuse_folds,
+        )
+    if operand_words * hw.bytes_per_word <= hw.sram_input_bytes:
+        return operand_words
+    return operand_words * reuse_folds
+
+
+def gemm_cost_model(M, K, N, df: Dataflow, R, C, hw: HardwareConfig):
+    """The closed-form per-GEMM cost model, expressed exactly once.
+
+    Elementwise over Python ints (the scalar oracle, ``gemm_latency``) or
+    int64 ndarrays (the batched engine, ``repro.core.cost_table``);
+    ``tpu_cost.TPU_V5E`` re-parameterizes the same model via
+    ``HardwareConfig`` constants.
+
+    Returns ``(cycles, compute_cycles, traffic_words)`` as float64, where
+    cycles = max(compute, traffic / bandwidth) + per-GEMM overhead — the
+    pipeline-vs-memory roof of paper 3.3.
+    """
+    a_words, b_words, c_words = M * K, K * N, M * N
+    if df is Dataflow.OS:
+        # each PE owns one output; K streams through the array
+        compute = _cdiv(M, R) * _cdiv(N, C) * (K + R + C - 2)
+        traffic = (
+            _reads(a_words, _cdiv(N, C), hw)
+            + _reads(b_words, _cdiv(M, R), hw)
+            + c_words  # written once
+        )
+    elif df is Dataflow.WS:
+        # a K x N weight tile is pinned; M activations stream past it
+        # (R-cycle weight preload per fold)
+        compute = _cdiv(K, R) * _cdiv(N, C) * (R + M + C - 1)
+        traffic = (
+            _reads(a_words, _cdiv(N, C), hw)
+            + b_words  # each weight element loaded exactly once
+            # partial outputs spill/reload once per extra K fold
+            + c_words * (2 * _cdiv(K, R) - 1)
+        )
+    elif df is Dataflow.IS:
+        # an M x K input tile is pinned; N weight columns stream past it
+        compute = _cdiv(M, R) * _cdiv(K, C) * (R + N + C - 1)
+        traffic = (
+            a_words  # each input element loaded exactly once
+            + _reads(b_words, _cdiv(M, R), hw)
+            + c_words * (2 * _cdiv(K, C) - 1)
+        )
+    else:  # pragma: no cover
+        raise ValueError(df)
+    if isinstance(compute, np.ndarray):
+        compute = np.asarray(compute, np.float64)
+        traffic = np.asarray(traffic, np.float64)
+        mem_cycles = traffic / hw.dram_words_per_cycle
+        cycles = np.maximum(compute, mem_cycles) + hw.gemm_overhead_cycles
+        return cycles, compute, traffic
+    # Python-int fast path (the per-cell scalar oracle): the same IEEE
+    # double ops as the array path, so results stay bit-identical
+    compute = float(compute)
+    traffic = float(traffic)
+    cycles = max(compute, traffic / hw.dram_words_per_cycle) + hw.gemm_overhead_cycles
+    return cycles, compute, traffic
 
 
 def gemm_latency(
@@ -104,46 +173,10 @@ def gemm_latency(
     """Closed-form latency of one (M x K) @ (K x N) GEMM on an R x C array."""
     R = rows if rows is not None else hw.pe_rows
     C = cols if cols is not None else hw.pe_cols
-    M, K, N = g.M, g.K, g.N
-    a_words, b_words, c_words = M * K, K * N, M * N
-
-    if df is Dataflow.OS:
-        # each PE owns one output; K streams through the array
-        folds = math.ceil(M / R) * math.ceil(N / C)
-        compute = folds * (K + R + C - 2)
-        traffic = (
-            _reads(a_words, math.ceil(N / C), hw.sram_input_bytes, hw.bytes_per_word)
-            + _reads(b_words, math.ceil(M / R), hw.sram_input_bytes, hw.bytes_per_word)
-            + c_words  # written once
-        )
-    elif df is Dataflow.WS:
-        # a K x N weight tile is pinned; M activations stream past it
-        folds = math.ceil(K / R) * math.ceil(N / C)
-        compute = folds * (R + M + C - 1)  # R-cycle weight preload per fold
-        k_folds = math.ceil(K / R)
-        traffic = (
-            _reads(a_words, math.ceil(N / C), hw.sram_input_bytes, hw.bytes_per_word)
-            + b_words  # each weight element loaded exactly once
-            # partial outputs spill/reload once per extra K fold
-            + c_words * (2 * k_folds - 1)
-        )
-    elif df is Dataflow.IS:
-        # an M x K input tile is pinned; N weight columns stream past it
-        folds = math.ceil(M / R) * math.ceil(K / C)
-        compute = folds * (R + N + C - 1)
-        k_folds = math.ceil(K / C)
-        traffic = (
-            a_words  # each input element loaded exactly once
-            + _reads(b_words, math.ceil(M / R), hw.sram_input_bytes, hw.bytes_per_word)
-            + c_words * (2 * k_folds - 1)
-        )
-    else:  # pragma: no cover
-        raise ValueError(df)
-
-    mem_cycles = traffic / hw.dram_words_per_cycle
-    cycles = max(float(compute), mem_cycles) + hw.gemm_overhead_cycles
+    cycles, compute, traffic = gemm_cost_model(g.M, g.K, g.N, df, R, C, hw)
+    cycles = float(cycles)
     util = g.macs / (cycles * R * C) if cycles > 0 else 0.0
-    return GemmReport(cycles, float(compute), traffic, util)
+    return GemmReport(cycles, float(compute), float(traffic), util)
 
 
 # ---------------------------------------------------------------------------

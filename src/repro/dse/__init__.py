@@ -1,0 +1,10 @@
+"""``repro.dse`` — the DSE command-line entry point package.
+
+``python -m repro.dse`` runs :func:`repro.dse_cli.main`; the core
+algorithm lives in ``repro.core.dse`` (Algorithm 1) and the batched
+cost-table engine in ``repro.core.cost_table``.
+"""
+
+from repro.dse_cli import main, run_dse
+
+__all__ = ["main", "run_dse"]

@@ -1,0 +1,326 @@
+"""``python -m repro.dse`` — end-to-end design-space exploration CLI.
+
+Runs the paper's Algorithm 1 for any named config in ``repro.configs``
+(e.g. ``tt-lm-100m``, ``glm4-9b``) or the paper's vision workloads
+(``resnet18/cifar10``, ``resnet18/tiny_imagenet``, ``vit_ti4/cifar10``):
+
+    PYTHONPATH=src python -m repro.dse --arch tt-lm-100m
+    PYTHONPATH=src python -m repro.dse --arch resnet18/cifar10 --hw tpu_v5e \
+        --top-k 8 --objective edp --out report.json
+
+Pipeline: enumerate the model's tensorized projections as per-layer
+tensor networks -> MAC-guided top-K path search (memoised across the
+model's repeated layers) -> batched cost-table build
+(``repro.core.cost_table``) -> hierarchical global argmin.  Emits a JSON
+report (schema documented in the README) with the winning strategy,
+per-layer (path, partitioning, dataflow) choices and stage timings;
+``examples/dse_explore.py`` and ``benchmarks/table2_dse_choices.py``
+consume the same report via ``run_dse``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import time
+from typing import Optional, Sequence
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import (
+    ALL_PARTITIONINGS,
+    FPGA_VU9P,
+    TPU_V5E,
+    TensorNetwork,
+    build_cost_tables,
+    find_topk_paths,
+    global_search,
+)
+from repro.core.dse import build_cost_table
+from repro.models.config import ModelConfig
+from repro.nn.linear import LinearSpec
+
+HW_TARGETS = {FPGA_VU9P.name: FPGA_VU9P, TPU_V5E.name: TPU_V5E}
+OBJECTIVES = ("latency", "edp")
+
+#: vision workloads of the paper's Tables 1-4 (model_layers-backed)
+VISION_ARCHS = ("resnet18/cifar10", "resnet18/tiny_imagenet", "vit_ti4/cifar10")
+
+
+# ---------------------------------------------------------------------------
+# config -> per-layer DSE problems
+# ---------------------------------------------------------------------------
+
+def _block_specs(cfg: ModelConfig) -> list[tuple[LinearSpec, int, float]]:
+    """(spec, instance_count, token_scale) for every projection family.
+
+    ``token_scale`` rescales the streamed token count for projections that
+    see a fraction of the batch (MoE expert capacity).
+    """
+    from repro.models.blocks import attn_spec, mlp_spec, moe_spec, ssm_spec, rwkv_spec
+    from repro.models.lm import head_spec
+
+    L = cfg.n_layers
+    out: list[tuple[LinearSpec, int, float]] = []
+
+    def attn(spec, count):
+        out.extend([(spec.q_spec, count, 1.0), (spec.k_spec, count, 1.0),
+                    (spec.v_spec, count, 1.0), (spec.o_spec, count, 1.0)])
+
+    def mlp(spec, count, scale=1.0):
+        if spec.kind == "swiglu":
+            out.append((spec.gate_spec, count, scale))
+        out.extend([(spec.up_spec, count, scale), (spec.down_spec, count, scale)])
+
+    if cfg.family in ("dense", "vlm"):
+        attn(attn_spec(cfg), L)
+        mlp(mlp_spec(cfg), L)
+    elif cfg.family == "moe":
+        attn(attn_spec(cfg), L)
+        ms = moe_spec(cfg)
+        # capacity-padded execution (nn/moe.py): ALL experts run, each on
+        # its capacity slice of ~ top_k * cf / E of the token stream
+        cap = ms.top_k * cfg.capacity_factor / max(ms.n_experts, 1)
+        if ms.kind == "swiglu":
+            out.append((ms.expert_gate, L * ms.n_experts, cap))
+        out.extend([(ms.expert_up, L * ms.n_experts, cap),
+                    (ms.expert_down, L * ms.n_experts, cap)])
+        if ms.shared_spec is not None:
+            # shared experts are merged into ONE wider MLP per layer
+            mlp(ms.shared_spec, L)
+    elif cfg.family == "hybrid":
+        ss = ssm_spec(cfg)
+        out.extend([(ss.in_spec, L, 1.0), (ss.out_spec, L, 1.0)])
+        n_groups = L // cfg.attn_every if cfg.attn_every else 0
+        if n_groups:  # one shared parameter set, applied once per group
+            attn(attn_spec(cfg, name="shared_attn"), n_groups)
+    elif cfg.family == "rwkv":
+        rs = rwkv_spec(cfg)
+        for tag in ("wr", "wk", "wv", "wg", "wo", "cmv"):
+            out.append((rs.proj(tag), L, 1.0))
+        out.append((rs.proj("cmk", rs.ffn), L, 1.0))
+        out.append((LinearSpec(f"{rs.name}.cmr", rs.ffn, cfg.d_model,
+                               False, "attn", cfg.tt), L, 1.0))
+    elif cfg.family == "encdec":
+        attn(attn_spec(cfg, "enc_attn", causal=False), cfg.encoder_layers)
+        mlp(mlp_spec(cfg, "enc_mlp"), cfg.encoder_layers)
+        attn(attn_spec(cfg), L)
+        attn(attn_spec(cfg, "xattn"), L)
+        mlp(mlp_spec(cfg), L)
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+    out.append((head_spec(cfg), 1, 1.0))
+    return out
+
+
+def model_dse_layers(
+    cfg: ModelConfig, tokens: int
+) -> list[tuple[str, TensorNetwork]]:
+    """Tensorized projections of ``cfg`` as named contraction problems.
+
+    One entry per projection *instance* (repeated transformer layers
+    appear L times — the batched cost-table engine dedups them), with the
+    streamed token count as the batch edge.
+    """
+    layers: list[tuple[str, TensorNetwork]] = []
+    for spec, count, scale in _block_specs(cfg):
+        if not spec.tensorized:
+            continue  # dense projections have no path/dataflow freedom here
+        t = max(1, math.ceil(tokens * scale))
+        tn = spec.network(t)
+        for i in range(count):
+            layers.append((f"{spec.name}[{i}]" if count > 1 else spec.name, tn))
+    if not layers:
+        raise ValueError(
+            f"config {cfg.name!r} has no tensorized projections "
+            f"(tt.enabled={cfg.tt.enabled}, min_dim={cfg.tt.min_dim})"
+        )
+    return layers
+
+
+def _vision_dse_layers(arch: str, tokens: int) -> list[tuple[str, TensorNetwork]]:
+    from repro.models.vision import model_layers
+
+    model, dataset = arch.split("/")
+    batch = max(1, tokens)
+    return [(l.name, l.tt_network) for l in model_layers(model, dataset, batch=batch)]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end run
+# ---------------------------------------------------------------------------
+
+def run_dse(
+    arch: str,
+    hw: str = "fpga_vu9p",
+    top_k: int = 4,
+    objective: str = "latency",
+    tokens: Optional[int] = None,
+    smoke: bool = False,
+    engine: str = "vectorized",
+) -> dict:
+    """Run Algorithm 1 end-to-end; returns the JSON-serializable report.
+
+    ``tokens`` is the streamed token count per projection (default 1024);
+    for vision archs it is the im2col batch size (default 1).
+    """
+    if hw not in HW_TARGETS:
+        raise KeyError(f"unknown hw {hw!r}; have {sorted(HW_TARGETS)}")
+    if objective not in OBJECTIVES:
+        raise KeyError(f"unknown objective {objective!r}; have {OBJECTIVES}")
+    if engine == "scalar" and objective == "edp":
+        raise ValueError("objective=edp requires the vectorized engine")
+    hw_cfg = HW_TARGETS[hw]
+
+    if arch in VISION_ARCHS:
+        tokens = 1 if tokens is None else tokens
+        named = _vision_dse_layers(arch, tokens)
+    else:
+        tokens = 1024 if tokens is None else tokens
+        try:
+            cfg = get_config(arch, smoke=smoke)
+        except KeyError:
+            raise KeyError(
+                f"unknown arch {arch!r}; have ('tt-lm-100m',) + "
+                f"{tuple(ARCH_IDS)} + {VISION_ARCHS}"
+            ) from None
+        named = model_dse_layers(cfg, tokens)
+
+    # stage 1 — top-K path search, memoised over repeated layers
+    t0 = time.perf_counter()
+    path_memo: dict = {}
+    layer_paths = []
+    for _, tn in named:
+        key = tuple((n.edges, n.dims, n.kind) for n in tn.nodes)
+        if key not in path_memo:
+            path_memo[key] = find_topk_paths(tn, k=top_k)
+        layer_paths.append(path_memo[key])
+    path_search_s = time.perf_counter() - t0
+
+    # stage 2 — batched cost table (scalar engine kept for benchmarking)
+    all_parts = ALL_PARTITIONINGS
+    if engine == "scalar":
+        t0 = time.perf_counter()
+        seconds_table = build_cost_table(
+            layer_paths, hw_cfg, all_parts, engine="scalar"
+        )
+        tables = None
+        table_build_s = time.perf_counter() - t0
+        obj_table = seconds_table
+    else:
+        tables = build_cost_tables(layer_paths, hw_cfg, all_parts)
+        seconds_table = tables.seconds
+        table_build_s = tables.build_seconds
+        obj_table = tables.edp(hw_cfg) if objective == "edp" else seconds_table
+
+    # stage 3 — hierarchical global argmin over the chosen objective
+    t0 = time.perf_counter()
+    res = global_search(layer_paths, hw_cfg, table=obj_table)
+    argmin_s = time.perf_counter() - t0
+
+    layers = []
+    total_latency = 0.0
+    for (name, _), choice in zip(named, res.choices):
+        key = (choice.layer, choice.path_index, choice.partitioning,
+               choice.dataflow)
+        latency_s = seconds_table[key]
+        total_latency += latency_s
+        layers.append({
+            "name": name,
+            "path_index": choice.path_index,
+            "mac_optimal_path": choice.path_index == 0,
+            "macs": choice.path.macs,
+            "partitioning": list(choice.partitioning),
+            "dataflow": choice.dataflow.value,
+            "latency_s": latency_s,
+            "objective": choice.latency_s,  # == latency_s unless EDP
+        })
+    return {
+        "arch": arch,
+        "hw": hw,
+        "objective": objective,
+        "top_k": top_k,
+        "tokens": tokens,
+        "engine": engine,
+        "strategy": res.strategy,
+        "total_latency_s": total_latency,
+        "total_objective": res.total_latency_s,
+        "n_layers": len(layers),
+        "timings": {
+            "path_search_s": path_search_s,
+            "table_build_s": table_build_s,
+            "argmin_s": argmin_s,
+        },
+        "table": {
+            "n_cells": len(seconds_table),
+            "n_unique_gemm_evals": tables.n_unique_gemm_evals if tables else None,
+            "n_unique_layers": tables.n_unique_layers if tables else None,
+        },
+        "layers": layers,
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.dse",
+        description="Global latency/EDP-driven DSE (paper Algorithm 1).",
+    )
+    p.add_argument("--arch", help="named config (see --list-archs)")
+    p.add_argument("--hw", default="fpga_vu9p", choices=sorted(HW_TARGETS))
+    p.add_argument("--top-k", type=int, default=4, metavar="K",
+                   help="candidate paths kept per layer (default 4)")
+    p.add_argument("--objective", default="latency", choices=OBJECTIVES)
+    p.add_argument("--tokens", type=int, default=None,
+                   help="streamed tokens per projection (default 1024; "
+                        "vision archs: im2col batch, default 1)")
+    p.add_argument("--smoke", action="store_true",
+                   help="use the config's reduced SMOKE variant")
+    p.add_argument("--engine", default="vectorized",
+                   choices=("vectorized", "scalar"),
+                   help="cost-table engine (scalar = per-cell oracle)")
+    p.add_argument("--out", default="-", metavar="PATH",
+                   help="report destination ('-' = stdout, default)")
+    p.add_argument("--list-archs", action="store_true",
+                   help="print supported --arch values and exit")
+    return p
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.list_archs:
+        for a in ("tt-lm-100m",) + tuple(ARCH_IDS) + VISION_ARCHS:
+            print(a)
+        return 0
+    if not args.arch:
+        _build_parser().error("--arch is required (see --list-archs)")
+    try:
+        report = run_dse(
+            arch=args.arch,
+            hw=args.hw,
+            top_k=args.top_k,
+            objective=args.objective,
+            tokens=args.tokens,
+            smoke=args.smoke,
+            engine=args.engine,
+        )
+    except (KeyError, ValueError) as e:
+        msg = e.args[0] if e.args else e
+        print(f"error: {msg}", file=sys.stderr)
+        return 2
+    text = json.dumps(report, indent=2)
+    if args.out == "-":
+        print(text)
+    else:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

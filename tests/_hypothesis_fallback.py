@@ -1,0 +1,100 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API subset
+this test suite uses (``given``, ``settings``, ``strategies.integers /
+lists / sampled_from / booleans``).
+
+``conftest.py`` installs it into ``sys.modules`` ONLY when the real
+hypothesis is not importable (e.g. the offline container), so CI with
+``requirements-dev.txt`` installed still gets real shrinking/replay.
+The fallback draws ``max_examples`` pseudo-random examples from a fixed
+seed — deterministic across runs, property coverage without the
+machinery.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+
+_SEED = 0x5EED
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int | None = None) -> _Strategy:
+    def draw(r):
+        hi = max_size if max_size is not None else min_size + 10
+        return [elements.draw(r) for _ in range(r.randint(min_size, hi))]
+
+    return _Strategy(draw)
+
+
+def settings(max_examples: int | None = None, deadline=None, **_ignored):
+    """Decorator recording ``max_examples``; composes with ``given`` in
+    either order (attribute is looked up through the wrapper chain)."""
+
+    def deco(fn):
+        if max_examples is not None:
+            fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                drawn = [s.draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+
+        # pytest must see a zero-arg signature (drawn params are not
+        # fixtures); functools.wraps leaks the original via __wrapped__
+        del wrapper.__wrapped__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ ``.strategies``)."""
+    mod = sys.modules[__name__]
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "floats", "sampled_from", "lists"):
+        setattr(strategies, name, getattr(mod, name))
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strategies
+    hyp.__fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies

@@ -2,8 +2,21 @@
 smoke tests and benches must see the real single CPU device; only the
 dry-run subprocess tests use forced host platform device counts."""
 
+import os
+import sys
+
 import jax
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # offline containers: register the minimal deterministic fallback so the
+    # property-test modules collect and run (see _hypothesis_fallback.py)
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
 
 jax.config.update("jax_enable_x64", False)
 

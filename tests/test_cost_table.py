@@ -1,0 +1,104 @@
+"""Vectorized cost-table engine vs the scalar ``simulate()`` oracle.
+
+The acceptance bar is *bit-identical* equality: the batched engine
+shares the closed-form model and replays the exact accumulation order of
+``layer_latency``, so every cell must compare equal with ``==`` (no
+tolerance) across random GEMM sets, all partitionings and all dataflows,
+on both hardware targets.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ALL_DATAFLOWS,
+    ALL_PARTITIONINGS,
+    FPGA_VU9P,
+    TPU_V5E,
+    build_cost_table,
+    build_cost_table_vectorized,
+    build_cost_tables,
+    find_topk_paths,
+    global_search,
+    simulate,
+    tt_linear_network,
+)
+
+HW = {"fpga_vu9p": FPGA_VU9P, "tpu_v5e": TPU_V5E}
+
+
+def _scalar_table(layer_paths, hw):
+    return build_cost_table(layer_paths, hw, ALL_PARTITIONINGS, engine="scalar")
+
+
+@pytest.mark.parametrize("hw_name", sorted(HW))
+def test_vectorized_bit_identical_fixed_networks(hw_name):
+    hw = HW[hw_name]
+    sizes = [
+        (4, (4, 4), (4, 4), (4, 4, 4)),
+        (64, (2, 8), (8, 2), (4, 4, 4)),
+        (1024, (12, 8, 8), (12, 8, 8), (16, 16, 16, 16, 16)),
+    ]
+    lp = [find_topk_paths(tt_linear_network(*s), k=4) for s in sizes]
+    lp.append(lp[0])  # duplicate layer exercises the layer-dedup path
+    scalar = _scalar_table(lp, hw)
+    vec = build_cost_table_vectorized(lp, hw, ALL_PARTITIONINGS)
+    assert set(scalar) == set(vec)
+    for key in scalar:
+        assert vec[key] == scalar[key], key  # bit-identical, no tolerance
+
+
+@given(
+    st.integers(1, 512),
+    st.lists(st.integers(2, 6), min_size=1, max_size=3),
+    st.lists(st.integers(2, 6), min_size=1, max_size=3),
+    st.integers(1, 8),
+)
+@settings(max_examples=20, deadline=None)
+def test_vectorized_bit_identical_random_networks(batch, in_modes, out_modes, rank):
+    ranks = (rank,) * (len(in_modes) + len(out_modes) - 1)
+    tn = tt_linear_network(batch, tuple(in_modes), tuple(out_modes), ranks)
+    lp = [find_topk_paths(tn, k=3)]
+    for hw in (FPGA_VU9P, TPU_V5E):
+        scalar = _scalar_table(lp, hw)
+        vec = build_cost_table_vectorized(lp, hw, ALL_PARTITIONINGS)
+        assert vec == scalar  # dict equality => bit-identical floats
+
+
+def test_vectorized_matches_simulate_per_cell():
+    tn = tt_linear_network(64, (8, 8), (8, 8), (8, 8, 8))
+    lp = [find_topk_paths(tn, k=4)]
+    vec = build_cost_table_vectorized(lp, FPGA_VU9P, ALL_PARTITIONINGS)
+    for (l, p, c, d), got in vec.items():
+        assert got == simulate(lp[l][p], c, d, FPGA_VU9P)
+
+
+def test_global_search_default_engine_unchanged():
+    """Algorithm 1 through the vectorized default must equal the scalar run."""
+    lp = [
+        find_topk_paths(tt_linear_network(4, (4, 4), (4, 4), (4, 4, 4)), k=3),
+        find_topk_paths(tt_linear_network(4, (2, 8), (8, 2), (4, 4, 4)), k=3),
+    ]
+    vec = global_search(lp, FPGA_VU9P)  # auto -> vectorized
+    scalar = global_search(lp, FPGA_VU9P, engine="scalar")
+    assert vec.total_latency_s == scalar.total_latency_s
+    assert vec.strategy == scalar.strategy
+    for a, b in zip(vec.choices, scalar.choices):
+        assert (a.path_index, a.partitioning, a.dataflow) == (
+            b.path_index, b.partitioning, b.dataflow)
+
+
+def test_cost_tables_metadata_and_edp():
+    tn = tt_linear_network(32, (4, 8), (8, 4), (8, 8, 8))
+    lp = [find_topk_paths(tn, k=2)] * 3  # identical layers
+    tables = build_cost_tables(lp, FPGA_VU9P)
+    assert tables.n_unique_layers == 1
+    assert tables.n_cells == len(tables.seconds)
+    assert set(tables.traffic_words) == set(tables.seconds)
+    edp = tables.edp(FPGA_VU9P)
+    assert set(edp) == set(tables.seconds)
+    for k, v in edp.items():
+        assert v > 0
+        # EDP = seconds * energy; energy strictly positive
+        assert v / tables.seconds[k] == pytest.approx(
+            tables.energy_joules(k, FPGA_VU9P))

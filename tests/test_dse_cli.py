@@ -1,0 +1,90 @@
+"""`python -m repro.dse` CLI: report schema, objectives, module hook."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.dse_cli import main, model_dse_layers, run_dse
+from repro.configs import get_config
+
+REQUIRED_KEYS = {
+    "arch", "hw", "objective", "top_k", "tokens", "engine", "strategy",
+    "total_latency_s", "total_objective", "n_layers", "timings", "table",
+    "layers",
+}
+
+
+def test_cli_smoke_json(capsys):
+    assert main(["--arch", "tt-lm-100m", "--top-k", "2"]) == 0
+    report = json.loads(capsys.readouterr().out)  # must be valid JSON
+    assert REQUIRED_KEYS <= set(report)
+    assert report["strategy"] in ("monolithic", "split")
+    assert report["n_layers"] == len(report["layers"]) > 0
+    assert report["total_latency_s"] > 0
+    for layer in report["layers"]:
+        assert layer["dataflow"] in ("IS", "OS", "WS")
+        assert tuple(layer["partitioning"]) in ((1, 1), (1, 2), (2, 1))
+        assert 0 <= layer["path_index"] < 2
+        assert layer["latency_s"] > 0
+    assert pytest.approx(report["total_latency_s"]) == sum(
+        l["latency_s"] for l in report["layers"])
+
+
+def test_cli_out_file(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    assert main(["--arch", "tt-lm-100m", "--top-k", "2", "--tokens", "64",
+                 "--out", str(out)]) == 0
+    capsys.readouterr()
+    report = json.loads(out.read_text())
+    assert report["tokens"] == 64
+
+
+def test_edp_objective_consistent():
+    lat = run_dse("tt-lm-100m", top_k=2, tokens=128)
+    edp = run_dse("tt-lm-100m", top_k=2, tokens=128, objective="edp")
+    assert edp["total_objective"] <= edp["total_latency_s"] * 1  # joule-seconds, tiny
+    # the EDP argmin can only match or exceed the latency argmin's latency
+    assert edp["total_latency_s"] >= lat["total_latency_s"] - 1e-15
+
+
+def test_tpu_target_and_vision_arch():
+    r = run_dse("tt-lm-100m", hw="tpu_v5e", top_k=2, tokens=64)
+    assert r["hw"] == "tpu_v5e" and r["total_latency_s"] > 0
+    v = run_dse("vit_ti4/cifar10", top_k=2)
+    assert v["n_layers"] > 0 and v["tokens"] == 1
+
+
+def test_unknown_arch_and_hw_raise():
+    with pytest.raises(KeyError):
+        run_dse("no-such-model")
+    with pytest.raises(KeyError):
+        run_dse("tt-lm-100m", hw="no-such-hw")
+
+
+def test_model_dse_layers_covers_families():
+    """Every config family enumerates at least its head projection when
+    tensorized; tt-lm-100m covers attn+mlp+head."""
+    cfg = get_config("tt-lm-100m")
+    names = [n for n, _ in model_dse_layers(cfg, tokens=64)]
+    assert any(n.startswith("attn.") for n in names)
+    assert any(n.startswith("mlp.") for n in names)
+    assert "head" in names
+
+
+@pytest.mark.slow
+def test_module_invocation_subprocess():
+    """The documented entry point: PYTHONPATH=src python -m repro.dse ..."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.dse", "--arch", "tt-lm-100m",
+         "--top-k", "2", "--tokens", "64"],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["arch"] == "tt-lm-100m"
