@@ -1,0 +1,105 @@
+"""Default-path vs planned execution, per workload.
+
+For each TT projection workload this benchmark:
+
+1. runs the DSE and compiles an ExecutionPlan (`repro.plan`);
+2. reports the *simulated* latency of the naive default — MAC-optimal
+   path, monolithic array, OS dataflow — against the plan's searched
+   (path, partitioning, dataflow) choice;
+3. times the *executed* forward pass (jitted, CPU) for the default
+   executor vs the planned jnp executor (isolating the contraction-path
+   change), plus the plan's Pallas backend in interpret mode.
+
+Interpret-mode kernel timings measure Python-level kernel-body
+evaluation, not TPU performance — they are correctness/plumbing numbers;
+the analytic columns carry the hardware story (paper Tables 3/4).
+
+  PYTHONPATH=src python -m benchmarks.bench_plan_exec
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FPGA_VU9P, find_topk_paths
+from repro.core.dse import global_search
+from repro.core.simulator import Dataflow, simulate
+from repro.nn import LinearSpec, TTConfig, install_plan, linear_apply, linear_init
+from repro.plan import compile_plan
+
+from .common import emit, timed
+
+#: (name, d_in, d_out, d, rank, tokens)
+WORKLOADS = [
+    ("mlp_512x2048", 512, 2048, 3, 16, 256),
+    ("attn_768x768", 768, 768, 3, 16, 256),
+    ("mlp_1024x4096", 1024, 4096, 3, 16, 256),
+]
+
+
+def _bench_one(name: str, d_in: int, d_out: int, d: int, rank: int,
+               tokens: int) -> dict:
+    tt = TTConfig(enabled=True, d=d, rank=rank, min_dim=min(d_in, d_out))
+    spec = LinearSpec(name, d_in, d_out, tag="mlp", tt=tt)
+    tn = spec.network(tokens)
+    paths = find_topk_paths(tn, k=4)
+    res = global_search([paths], FPGA_VU9P)
+    plan = compile_plan([(name, tn)], res, FPGA_VU9P, arch=name, tokens=tokens)
+    lp = plan.layers[0]
+    choice = res.choices[0]
+
+    # analytic: naive default (MAC-optimal path, monolithic, OS) vs plan
+    sim_default = simulate(paths[0], (1, 1), Dataflow.OS, FPGA_VU9P)
+    sim_planned = choice.latency_s
+
+    params = linear_init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (tokens, d_in))
+
+    def run(p, xv):
+        return linear_apply(spec, p, xv)
+
+    install_plan(None)
+    f_default = jax.jit(run)
+    f_default(params, x).block_until_ready()  # compile outside the timing
+    _, t_default = timed(lambda: f_default(params, x).block_until_ready())
+
+    install_plan(plan.with_backend("jnp"))
+    f_planned = jax.jit(run)
+    f_planned(params, x).block_until_ready()
+    _, t_planned_jnp = timed(lambda: f_planned(params, x).block_until_ready())
+
+    install_plan(plan)  # the compiled backend (interpret mode on CPU)
+    f_kernel = jax.jit(run)
+    f_kernel(params, x).block_until_ready()
+    _, t_kernel = timed(lambda: f_kernel(params, x).block_until_ready(),
+                        repeat=1)
+    err = float(jnp.max(jnp.abs(f_kernel(params, x) - f_default(params, x))))
+    install_plan(None)
+
+    return {
+        "workload": name,
+        "tokens": tokens,
+        "plan_backend": lp.backend,
+        "path_index": lp.path_index,
+        "dataflow": lp.dataflow,
+        "partitioning": "x".join(map(str, lp.partitioning)),
+        "sim_default_us": sim_default * 1e6,
+        "sim_planned_us": sim_planned * 1e6,
+        "sim_speedup": sim_default / sim_planned if sim_planned else float("nan"),
+        "wall_default_ms": t_default * 1e3,
+        "wall_planned_jnp_ms": t_planned_jnp * 1e3,
+        "wall_kernel_interpret_ms": t_kernel * 1e3,
+        "kernel_max_abs_err": err,
+    }
+
+
+def run() -> list[dict]:
+    rows = [_bench_one(*w) for w in WORKLOADS]
+    emit("bench_plan_exec", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

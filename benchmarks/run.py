@@ -16,6 +16,7 @@ import traceback
 
 from . import (
     bench_dse_overhead,
+    bench_plan_exec,
     fig3_paths,
     fig5_dataflow,
     table1_compression,
@@ -32,6 +33,7 @@ SUITES = {
     "fig3": fig3_paths.run,
     "fig5": fig5_dataflow.run,
     "dse_overhead": bench_dse_overhead.run,
+    "plan_exec": bench_plan_exec.run,
 }
 
 

@@ -1,4 +1,5 @@
-"""Quickstart: tensorize one layer, search paths, run the DSE, execute.
+"""Quickstart: tensorize one layer, search paths, run the DSE, execute —
+then compile the DSE result into an execution plan and run *that*.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,7 +15,8 @@ from repro.core import (
     find_topk_paths,
     tt_linear_network,
 )
-from repro.nn import LinearSpec, TTConfig, linear_apply, linear_init
+from repro.nn import LinearSpec, TTConfig, install_plan, linear_apply, linear_init
+from repro.plan import ExecutionPlan, compile_plan, execution_log
 
 # 1. A 1024 -> 4096 projection, TT-factorized at rank 16 --------------------
 tt = TTConfig(enabled=True, d=3, rank=16, min_dim=512)
@@ -30,8 +32,9 @@ print("top-K path MACs:", [f"{p.macs:,}" for p in paths])
 print(f"dense GEMM MACs: {256 * 1024 * 4096:,}")
 
 # 3. Global latency-driven DSE (Algorithm 1) over (path, split, dataflow) ---
+results = {}
 for hw in (FPGA_VU9P, TPU_V5E):
-    res = explore_model([tn], hw, top_k=4)
+    results[hw.name] = res = explore_model([tn], hw, top_k=4)
     c = res.choices[0]
     print(f"{hw.name}: strategy={res.strategy} path={c.path_index} "
           f"partition={c.partitioning} dataflow={c.dataflow.value} "
@@ -42,3 +45,20 @@ params = linear_init(jax.random.PRNGKey(0), spec)
 x = jax.random.normal(jax.random.PRNGKey(1), (256, 1024))
 y = jax.jit(lambda p, x: linear_apply(spec, p, x))(params, x)
 print("forward:", x.shape, "->", y.shape, "finite:", bool(jnp.all(jnp.isfinite(y))))
+
+# 5. Compile the DSE result into an ExecutionPlan and execute *it* ----------
+#    (the search -> compile -> install -> execute loop; docs/plan_format.md)
+plan = compile_plan([(spec.name, tn)], results[FPGA_VU9P.name], FPGA_VU9P,
+                    arch="quickstart", tokens=256)
+lp = plan.layers[0]
+print(f"plan: backend={lp.backend} dataflow={lp.dataflow} "
+      f"path_steps={list(map(list, lp.path_steps))}")
+assert ExecutionPlan.loads(plan.dumps()) == plan  # round-trips bit-equal
+
+install_plan(plan)
+y_planned = jax.jit(lambda p, x: linear_apply(spec, p, x))(params, x)
+install_plan(None)
+err = float(jnp.max(jnp.abs(y_planned - y)))
+ran = [(r["name"], r["backend"]) for r in execution_log()]
+print(f"planned execution {ran}: max |planned - default| = {err:.2e}")
+assert err < 1e-4

@@ -1,0 +1,63 @@
+"""Docs link checker: every relative markdown link must resolve.
+
+Scans README.md and docs/*.md for ``[text](target)`` links; non-URL
+targets (stripped of ``#anchors``) must exist relative to the linking
+file (or the repo root as a fallback).  Exits non-zero listing every
+broken link — run by CI so docs cross-references stay valid.
+
+  python scripts/check_docs_links.py
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: [text](target) — excluding images' size suffixes and inline code
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def _targets(path: str):
+    text = open(path, encoding="utf-8").read()
+    # drop fenced code blocks: link-shaped text inside them is not a link
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in _LINK_RE.finditer(text):
+        yield m.group(1)
+
+
+def check(paths) -> list[str]:
+    broken = []
+    for md in paths:
+        base = os.path.dirname(md)
+        for target in _targets(md):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:           # pure in-page anchor
+                continue
+            ok = (os.path.exists(os.path.join(base, rel))
+                  or os.path.exists(os.path.join(REPO, rel)))
+            if not ok:
+                broken.append(f"{os.path.relpath(md, REPO)}: {target}")
+    return broken
+
+
+def main() -> int:
+    paths = sorted(
+        [os.path.join(REPO, "README.md")]
+        + glob.glob(os.path.join(REPO, "docs", "*.md"))
+    )
+    broken = check(paths)
+    for b in broken:
+        print(f"broken link: {b}", file=sys.stderr)
+    print(f"checked {len(paths)} files: "
+          f"{'OK' if not broken else f'{len(broken)} broken links'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,6 +26,7 @@ def execute_path(
     out_edges: Sequence[str] | None = None,
     preferred_dtype=None,
     constrain=None,
+    contract_fn=None,
 ) -> jnp.ndarray:
     """Contract ``tn`` along ``path`` using ``tensors[name]`` per node.
 
@@ -34,6 +35,10 @@ def execute_path(
     given, is called as ``constrain(edges, tensor) -> tensor`` after every
     pairwise contraction — the hook the distributed layer uses to pin
     sharding onto intermediates (GSPMD loses it through merged dims).
+    ``contract_fn``, if given, replaces the per-step ``jnp.tensordot`` —
+    called as ``contract_fn(ta, tb, (ax_a, ax_b))`` and expected to return
+    the tensordot-ordered result (A's free axes then B's free axes); the
+    plan executor uses it to lower each step to a Pallas GEMM.
     """
     steps = path.steps if isinstance(path, CandidatePath) else tuple(path)
     work: list[tuple[tuple[str, ...], jnp.ndarray]] = []
@@ -51,8 +56,11 @@ def execute_path(
         shared = [e for e in ea if e in eb]
         ax_a = [ea.index(e) for e in shared]
         ax_b = [eb.index(e) for e in shared]
-        tc = jnp.tensordot(ta, tb, axes=(ax_a, ax_b),
-                           preferred_element_type=preferred_dtype)
+        if contract_fn is not None:
+            tc = contract_fn(ta, tb, (ax_a, ax_b))
+        else:
+            tc = jnp.tensordot(ta, tb, axes=(ax_a, ax_b),
+                               preferred_element_type=preferred_dtype)
         ec = tuple(e for e in ea if e not in shared) + tuple(
             e for e in eb if e not in shared
         )

@@ -165,6 +165,52 @@ def run_dse(
     ``tokens`` is the streamed token count per projection (default 1024);
     for vision archs it is the im2col batch size (default 1).
     """
+    report, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens, smoke, engine)
+    return report
+
+
+def run_dse_plan(
+    arch: str,
+    hw: str = "fpga_vu9p",
+    top_k: int = 4,
+    objective: str = "latency",
+    tokens: Optional[int] = None,
+    smoke: bool = False,
+    engine: str = "vectorized",
+    plan_backend: str = "auto",
+):
+    """Run the DSE and compile its result into an ExecutionPlan.
+
+    Returns ``(report, plan)`` — the same report as :func:`run_dse` plus
+    the installable plan (``repro.plan.ExecutionPlan``).  This is the
+    search->compile half of the deploy loop; ``launch/serve.py --plan``
+    is the install->execute half.
+    """
+    from repro.plan import compile_plan
+
+    report, named, res, hw_cfg = _run_dse(
+        arch, hw, top_k, objective, tokens, smoke, engine)
+    plan = compile_plan(
+        named, res, hw_cfg,
+        arch=arch,
+        objective=objective,
+        tokens=report["tokens"],
+        backend=plan_backend,
+        total_latency_s=report["total_latency_s"],
+    )
+    return report, plan
+
+
+def _run_dse(
+    arch: str,
+    hw: str = "fpga_vu9p",
+    top_k: int = 4,
+    objective: str = "latency",
+    tokens: Optional[int] = None,
+    smoke: bool = False,
+    engine: str = "vectorized",
+):
+    """Shared pipeline; returns (report, named_layers, DSEResult, hw_cfg)."""
     if hw not in HW_TARGETS:
         raise KeyError(f"unknown hw {hw!r}; have {sorted(HW_TARGETS)}")
     if objective not in OBJECTIVES:
@@ -236,7 +282,7 @@ def run_dse(
             "latency_s": latency_s,
             "objective": choice.latency_s,  # == latency_s unless EDP
         })
-    return {
+    report = {
         "arch": arch,
         "hw": hw,
         "objective": objective,
@@ -259,6 +305,7 @@ def run_dse(
         },
         "layers": layers,
     }
+    return report, named, res, hw_cfg
 
 
 # ---------------------------------------------------------------------------
@@ -285,6 +332,13 @@ def _build_parser() -> argparse.ArgumentParser:
                    help="cost-table engine (scalar = per-cell oracle)")
     p.add_argument("--out", default="-", metavar="PATH",
                    help="report destination ('-' = stdout, default)")
+    p.add_argument("--emit-plan", default=None, metavar="PATH",
+                   help="compile the result into an executable plan "
+                        "(docs/plan_format.md) and write it to PATH")
+    p.add_argument("--plan-backend", default="auto",
+                   choices=("auto", "jnp", "tt_gemm", "streaming_tt"),
+                   help="force one kernel backend for every emitted layer "
+                        "plan (default: per-layer heuristic)")
     p.add_argument("--list-archs", action="store_true",
                    help="print supported --arch values and exit")
     return p
@@ -298,16 +352,35 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         return 0
     if not args.arch:
         _build_parser().error("--arch is required (see --list-archs)")
+    if args.plan_backend != "auto" and not args.emit_plan:
+        _build_parser().error("--plan-backend requires --emit-plan")
     try:
-        report = run_dse(
-            arch=args.arch,
-            hw=args.hw,
-            top_k=args.top_k,
-            objective=args.objective,
-            tokens=args.tokens,
-            smoke=args.smoke,
-            engine=args.engine,
-        )
+        if args.emit_plan:
+            report, plan = run_dse_plan(
+                arch=args.arch,
+                hw=args.hw,
+                top_k=args.top_k,
+                objective=args.objective,
+                tokens=args.tokens,
+                smoke=args.smoke,
+                engine=args.engine,
+                plan_backend=args.plan_backend,
+            )
+            plan.save(args.emit_plan)
+            backends = sorted({lp.backend for lp in plan.layers})
+            print(f"wrote plan {args.emit_plan} "
+                  f"({len(plan.layers)} layer plans, backends {backends})",
+                  file=sys.stderr)
+        else:
+            report = run_dse(
+                arch=args.arch,
+                hw=args.hw,
+                top_k=args.top_k,
+                objective=args.objective,
+                tokens=args.tokens,
+                smoke=args.smoke,
+                engine=args.engine,
+            )
     except (KeyError, ValueError) as e:
         msg = e.args[0] if e.args else e
         print(f"error: {msg}", file=sys.stderr)

@@ -224,6 +224,18 @@ def extrapolate(cfg: ModelConfig, values: dict[str, float]) -> float:
 # cell runner
 # ---------------------------------------------------------------------------
 
+def _cost_analysis(compiled) -> dict:
+    """Normalize Compiled.cost_analysis() across jax versions.
+
+    jax < 0.5 returns a list with one properties-dict per computation;
+    newer jax returns the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca or {}
+
+
 def run_cell(
     arch: str,
     shape_name: str,
@@ -280,7 +292,7 @@ def run_cell(
             "alias_bytes": int(ma.alias_size_in_bytes),
             "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0)),
         }
-        ca = compiled.cost_analysis()
+        ca = _cost_analysis(compiled)
         result["scanned_cost"] = {
             "flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),
@@ -296,7 +308,7 @@ def run_cell(
                 with use_rules(rules):
                     vlow = lower_step(vcfg, shape, mesh, rules)
                     vcomp = vlow.compile()
-                vca = vcomp.cost_analysis()
+                vca = _cost_analysis(vcomp)
                 vals_f[label] = float(vca.get("flops", 0.0))
                 vals_b[label] = float(vca.get("bytes accessed", 0.0))
                 vals_c[label] = collective_bytes(vcomp.as_text())["total"]

@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch tt-lm-100m --smoke \
       --batch 4 --prompt-len 32 --gen 16
+
+``--plan plan.json`` installs a DSE-compiled execution plan (emitted by
+``python -m repro.dse --emit-plan``, see docs/plan_format.md): every TT
+projection then contracts along its searched path through its searched
+kernel backend/dataflow, and the driver reports which backends executed.
 """
 
 from __future__ import annotations
@@ -30,6 +35,8 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="install a DSE execution plan (repro.dse --emit-plan)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tt=not args.dense, smoke=args.smoke)
@@ -37,7 +44,24 @@ def main() -> None:
     shape = ShapeConfig("cli", max_seq, args.batch, "decode")
     mesh = make_test_mesh()
     rules = make_rules(cfg, shape, mesh)
-    m = api(cfg)
+    if args.plan:
+        from repro.plan import (
+            check_plan_for_config,
+            load_plan,
+            reset_execution_log,
+        )
+
+        plan = load_plan(args.plan)
+        problems = check_plan_for_config(plan, args.arch, cfg)
+        if problems:
+            raise SystemExit(
+                "error: plan/model mismatch: " + "; ".join(problems))
+        reset_execution_log()
+        m = api(cfg, plan=plan)
+        print(f"installed plan: arch={plan.arch} hw={plan.hw} "
+              f"strategy={plan.strategy} ({len(plan.layers)} layer plans)")
+    else:
+        m = api(cfg)
 
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len))
@@ -79,6 +103,25 @@ def main() -> None:
     print(f"decode  {args.gen} steps: {t_decode*1e3:.1f} ms "
           f"({t_decode/args.gen*1e3:.2f} ms/tok, batch {args.batch})")
     print("generated token ids (first row):", out[0][:16].tolist())
+    if args.plan:
+        import sys
+
+        from repro.plan import execution_log
+
+        log = execution_log()
+        by_backend: dict[str, int] = {}
+        for r in log:
+            by_backend[r["backend"]] = by_backend.get(r["backend"], 0) + 1
+        print(f"planned executions (trace-time): {len(log)} "
+              f"by backend {dict(sorted(by_backend.items()))}")
+        if not log:
+            print(
+                f"WARNING: plan {args.plan} (arch={plan.arch!r}) matched no "
+                f"executed projection of --arch {args.arch!r} — the run was "
+                "entirely UNPLANNED (layer names did not line up; was the "
+                "plan emitted for a different arch or tt/--dense setting?)",
+                file=sys.stderr,
+            )
 
 
 if __name__ == "__main__":

@@ -46,13 +46,29 @@ def main() -> None:
     ap.add_argument("--grad-compress", action="store_true")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="install a DSE execution plan (repro.dse --emit-plan); "
+                         "kernel backends are forced to jnp under training — "
+                         "the plan's contraction paths still apply, but "
+                         "autodiff never crosses a pallas_call")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tt=not args.dense, smoke=args.smoke)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     mesh = make_test_mesh()
     rules = make_rules(cfg, shape, mesh)
-    m = api(cfg)
+    if args.plan:
+        from repro.plan import check_plan_for_config, load_plan
+
+        plan = load_plan(args.plan)
+        problems = check_plan_for_config(plan, args.arch, cfg)
+        if problems:
+            raise SystemExit(
+                "error: plan/model mismatch: " + "; ".join(problems))
+        m = api(cfg, plan=plan, plan_backend="jnp")
+        print(f"installed plan {args.plan} (backends forced to jnp for autodiff)")
+    else:
+        m = api(cfg)
     pipe = make_pipeline(cfg.vocab, args.seq, args.batch)
 
     lr = linear_warmup_cosine(args.lr, args.warmup, args.steps)

@@ -30,7 +30,39 @@ class ModelAPI:
     init_caches: Callable
 
 
-def api(cfg: ModelConfig) -> ModelAPI:
+_PLAN_UNSET = object()  # sentinel: "plan argument not given"
+
+
+def api(cfg: ModelConfig, plan=_PLAN_UNSET, *,
+        plan_backend: Optional[str] = None) -> ModelAPI:
+    """Family-dispatched model API.
+
+    ``plan`` (an :class:`repro.plan.ExecutionPlan`, a plan-file path, or a
+    legacy ``{name: path_index}`` dict) is installed into the TT linear
+    layers before any callable is traced, so every projection contracts
+    along its planned path / kernel backend.  ``plan_backend`` forces one
+    executor for all layers (the train driver passes ``"jnp"`` — autodiff
+    never crosses a ``pallas_call``).
+
+    Plan state is global and *explicit*: omitting ``plan`` leaves
+    whatever is installed untouched (so the step builders' internal
+    ``api(cfg)`` dispatch never un-installs a driver's plan), while
+    passing ``plan=None`` clears it — use that when building an unplanned
+    baseline after a planned model in the same process.
+    """
+    if plan is not _PLAN_UNSET or plan_backend is not None:
+        from repro.nn import install_plan
+
+        if plan is _PLAN_UNSET or plan is None:
+            if plan_backend is not None:
+                raise ValueError(
+                    "plan_backend given without a plan to apply it to")
+            plan = None
+        if isinstance(plan, str):
+            from repro.plan import load_plan
+
+            plan = load_plan(plan)
+        install_plan(plan, force_backend=plan_backend)
     if cfg.family == "encdec":
         return ModelAPI(
             init_params=lambda rng: _encdec.init_params(rng, cfg),

@@ -30,6 +30,21 @@ from repro.sharding import shard as _shard
 _EDGE_AXES = {"b": "tokens", "b0": "batch", "b1": "seq"}
 
 
+def _single_device() -> bool:
+    """True when no multi-device sharding rules are installed.
+
+    The Pallas plan backends flatten (B, S) to tokens and apply no
+    sharding constraints; on a >1-device mesh that would force exactly
+    the relayout the split-batch-edge path exists to avoid, so planned
+    kernel routing is restricted to single-device execution — the plan's
+    contraction path still applies everywhere via the jnp executor.
+    """
+    from repro.sharding import get_rules
+
+    rules = get_rules()
+    return rules is None or all(v <= 1 for v in rules.axis_sizes.values())
+
+
 def _constrain_tokens(edges, t):
     """Pin TT-intermediate batch edges to their logical mesh axes.
 
@@ -128,17 +143,56 @@ def _topk_paths_cached(
     return tuple(find_topk_paths(tn, k=k))
 
 
-_PLAN: dict[str, int] = {}  # linear name -> chosen path index (from global DSE)
+_PLAN: dict[str, object] = {}  # linear name -> LayerPlan (from the DSE plan)
 
 
-def install_plan(plan: dict[str, int]) -> None:
-    """Install DSE-selected per-layer path indices (name -> index)."""
+def install_plan(plan, *, force_backend: Optional[str] = None) -> None:
+    """Install an :class:`repro.plan.ExecutionPlan` (or ``None`` to clear).
+
+    Legacy form: a ``{name: path_index}`` mapping — wrapped into
+    jnp-backend layer plans whose steps resolve against the trace-time
+    top-K list (the pre-plan behaviour).
+
+    ``force_backend`` overrides every entry's kernel backend — the train
+    driver forces ``"jnp"`` so autodiff never crosses a ``pallas_call``
+    (kernels are forward-only primitives).
+
+    Install *before* tracing: jit caches baked with a previous plan are
+    not invalidated.
+    """
+    from repro.plan.schema import ExecutionPlan, LayerPlan
+
     _PLAN.clear()
-    _PLAN.update(plan)
+    if plan is None:
+        return
+    if isinstance(plan, ExecutionPlan):
+        entries = {lp.name: lp for lp in plan.layers}
+    elif isinstance(plan, dict):
+        entries = {
+            name: LayerPlan(name=name, path_index=int(idx), path_steps=(),
+                            dataflow="OS", partitioning=(1, 1), backend="jnp")
+            for name, idx in plan.items()
+        }
+    else:
+        raise TypeError(f"cannot install plan of type {type(plan).__name__}")
+    if force_backend is not None:
+        if force_backend != "jnp" and any(
+                not v.path_steps for v in entries.values()):
+            raise ValueError(
+                f"force_backend={force_backend!r} requires plans with path "
+                "steps; legacy name->index entries execute via jnp only")
+        entries = {k: v.with_backend(force_backend) for k, v in entries.items()}
+    _PLAN.update(entries)
+
+
+def planned_layer(name: str):
+    """The installed LayerPlan for a projection, or None."""
+    return _PLAN.get(name)
 
 
 def planned_path_index(name: str) -> int:
-    return _PLAN.get(name, 0)
+    lp = _PLAN.get(name)
+    return lp.path_index if lp is not None else 0
 
 
 # ---------------------------------------------------------------------------
@@ -184,6 +238,23 @@ def linear_apply(
     if not spec.tensorized:
         y = jnp.einsum("...i,io->...o", x, params["w"])
     else:
+        lp = planned_layer(spec.name) if path_index is None else None
+        n_cores = len(spec.out_modes) + len(spec.in_modes)
+        if lp is not None and lp.backend != "jnp" and _single_device():
+            # planned kernel execution: flatten to (tokens, d_in) and route
+            # through the plan's Pallas backend (see repro.plan.executor)
+            from repro.plan.executor import planned_tt_linear
+
+            tokens = math.prod(lead) if lead else 1
+            cores = [params[f"core{k}"] for k in range(n_cores)]
+            y2d = planned_tt_linear(
+                lp, x.reshape(tokens, spec.d_in), cores,
+                spec.in_modes, spec.out_modes, spec.tt_ranks,
+            )
+            y = y2d.reshape(lead + (spec.d_out,)).astype(x.dtype)
+            if spec.bias:
+                y = y + params["b"].astype(y.dtype)
+            return y
         # keep (B, S) as split batch edges when present: shardings survive
         # without any tokens-flatten relayout (see _constrain_tokens)
         if len(lead) == 2:
@@ -196,11 +267,22 @@ def linear_apply(
                        + spec.in_modes)
         in_edges = b_edges + tuple(f"j{t+1}" for t in range(len(spec.in_modes)))
         xs = _constrain_tokens(in_edges, xs)
-        paths = _topk_paths_cached(
-            bdims, spec.in_modes, spec.out_modes, spec.tt_ranks, spec.tt.top_k
-        )
-        idx = path_index if path_index is not None else planned_path_index(spec.name)
-        idx = min(idx, len(paths) - 1)
+        if lp is not None and lp.path_steps:
+            # self-contained plan: replay its steps, skip the path search
+            steps: tuple[tuple[int, int], ...] = lp.path_steps
+        else:
+            paths = _topk_paths_cached(
+                bdims, spec.in_modes, spec.out_modes, spec.tt_ranks,
+                spec.tt.top_k
+            )
+            idx = path_index if path_index is not None else planned_path_index(spec.name)
+            steps = paths[min(idx, len(paths) - 1)].steps
+        if lp is not None:
+            from repro.plan.executor import record_execution
+
+            # this branch always executes via jnp — log the effective backend
+            eff = lp if lp.backend == "jnp" else lp.with_backend("jnp")
+            record_execution(eff, math.prod(lead) if lead else 1)
         tn = tt_linear_network(bdims, spec.in_modes, spec.out_modes,
                                spec.tt_ranks)
         tensors = {"X": xs}
@@ -208,8 +290,8 @@ def linear_apply(
         for k, name in enumerate(core_names):
             tensors[name] = params[f"core{k}"]
         out_edges = b_edges + tuple(f"i{t+1}" for t in range(len(spec.out_modes)))
-        y = execute_path(tn, paths[idx], tensors, out_edges=out_edges,
-                         constrain=_constrain_tokens)
+        y = execute_path(tn, steps, tensors, out_edges=out_edges,
+                        constrain=_constrain_tokens)
         y = y.reshape(lead + (spec.d_out,))
     if spec.bias:
         y = y + params["b"].astype(y.dtype)

@@ -1,0 +1,40 @@
+"""Execution-plan subsystem: search -> compile -> install -> execute.
+
+``python -m repro.dse --emit-plan plan.json`` compiles the DSE result
+into an :class:`ExecutionPlan`; ``repro.nn.install_plan(load_plan(path))``
+installs it; the TT projections then contract along the planned path
+through the planned kernel backend.  Format spec: ``docs/plan_format.md``.
+"""
+
+from .schema import (
+    BACKENDS,
+    PLAN_FORMAT_VERSION,
+    ExecutionPlan,
+    LayerPlan,
+    Tiling,
+    load_plan,
+)
+from .compiler import (
+    base_name,
+    batch_dim,
+    check_plan_for_config,
+    compile_plan,
+    streaming_fits,
+    validate_plan,
+)
+from .executor import (
+    as_candidate_path,
+    execution_log,
+    planned_tt_linear,
+    record_execution,
+    reset_execution_log,
+)
+
+__all__ = [
+    "BACKENDS", "PLAN_FORMAT_VERSION", "ExecutionPlan", "LayerPlan",
+    "Tiling", "load_plan",
+    "base_name", "batch_dim", "check_plan_for_config", "compile_plan",
+    "streaming_fits", "validate_plan",
+    "as_candidate_path", "execution_log", "planned_tt_linear",
+    "record_execution", "reset_execution_log",
+]

@@ -1,0 +1,284 @@
+"""DSEResult -> ExecutionPlan compiler (the "deploy" half of Algorithm 1).
+
+The DSE emits per-layer-*instance* choices; the model executes repeated
+blocks under one scanned trace.  The compiler therefore:
+
+1. collapses instances (``attn.wq[0]``..``attn.wq[L-1]``) to one
+   :class:`LayerPlan` per projection family — lossless, because identical
+   tensor networks produce identical cost-table rows and argmins;
+2. picks the kernel **backend** per layer:
+   - ``streaming_tt`` when the whole contraction fits the VMEM budget at
+     the plan's token-block size (cores pinned, activations streamed, no
+     intermediate spills) — the fused in-VMEM chain of paper §4.2;
+   - ``tt_gemm`` otherwise, lowering every pairwise contraction of the
+     path to the dataflow-configurable Pallas GEMM;
+   - ``jnp`` when the layer's GEMMs are too small for kernel tiling to
+     pay off (and always available as the reference fallback);
+3. derives the **tiling** from the path's dominant GEMM (power-of-two
+   blocks, MXU-aligned caps).
+
+Core partitioning (``1x2``/``2x1``) is an FPGA half-core construct with
+no TPU kernel realization; it is recorded verbatim for provenance and for
+the analytic latency numbers, but does not affect backend routing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional, Sequence
+
+from repro.core.dse import DSEResult, LayerChoice
+from repro.core.simulator import HardwareConfig
+from repro.core.tensor_network import Node, TensorNetwork
+
+from .schema import BACKENDS, ExecutionPlan, LayerPlan, Tiling
+
+#: conservative VMEM budget for the streaming backend (half a v5e core's
+#: 16 MiB VMEM, leaving headroom for double-buffering the token blocks)
+VMEM_BUDGET_BYTES = 8 * 2**20
+
+#: below this many MACs in the dominant GEMM, kernel dispatch overhead
+#: dominates and the plan keeps the pure-jnp executor
+MIN_KERNEL_MACS = 1 << 16
+
+_INSTANCE_RE = re.compile(r"\[\d+\]$")
+
+
+def base_name(instance_name: str) -> str:
+    """``attn.wq[3]`` -> ``attn.wq`` (DSE instance -> projection family)."""
+    return _INSTANCE_RE.sub("", instance_name)
+
+
+def _pow2_le(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def _input_node(tn: TensorNetwork) -> Node:
+    return next(n for n in tn.nodes if n.kind == "input")
+
+
+def batch_dim(tn: TensorNetwork) -> int:
+    """The streamed (batch) extent of a layer network.
+
+    The batch dims are exactly the input node's *free* edges — the mode
+    edges are all shared with cores.  Works for TT-linear networks (edge
+    ``b``, or ``b0``/``b1`` split; leading) and TT-conv networks (patch
+    edge ``l``; trailing).
+    """
+    x = _input_node(tn)
+    free = set(tn.free_edges)
+    return math.prod(d for e, d in zip(x.edges, x.dims) if e in free)
+
+
+def _rebatch(tn: TensorNetwork, tokens: int) -> TensorNetwork:
+    """Rebind the input node's batch (free) edges to ``tokens`` total."""
+    x = _input_node(tn)
+    free = set(tn.free_edges)
+    dims, first = [], True
+    for e, d in zip(x.edges, x.dims):
+        if e in free:
+            dims.append(tokens if first else 1)
+            first = False
+        else:
+            dims.append(d)
+    nodes = [Node(n.name, n.edges, tuple(dims), n.kind)
+             if n.name == x.name else n for n in tn.nodes]
+    return TensorNetwork(nodes)
+
+
+def _peak_live_elements(tn: TensorNetwork, steps) -> int:
+    """Max total elements live at any point while replaying ``steps``."""
+    peak = sum(n.size for n in tn.nodes)
+    cur = tn
+    for (i, j) in steps:
+        cur, _ = cur.contract_pair(i, j)
+        peak = max(peak, sum(n.size for n in cur.nodes))
+    return peak
+
+
+def streaming_fits(
+    tn: TensorNetwork,
+    steps,
+    block_tokens: int,
+    *,
+    bytes_per_elem: int = 4,
+    budget_bytes: int = VMEM_BUDGET_BYTES,
+) -> bool:
+    """Whether the full contraction of one token block stays in VMEM."""
+    block = _rebatch(tn, block_tokens)
+    return _peak_live_elements(block, steps) * bytes_per_elem <= budget_bytes
+
+
+def _choose_tiling(choice: LayerChoice, tokens: int) -> Tiling:
+    """Blocks from the path's dominant (highest-MAC) GEMM."""
+    g = max(choice.path.gemms, key=lambda g: g.macs)
+    return Tiling(
+        block_m=max(8, _pow2_le(min(128, g.M))),
+        block_k=max(8, _pow2_le(min(128, g.K))),
+        block_n=max(8, _pow2_le(min(128, g.N))),
+        block_tokens=max(8, _pow2_le(min(256, tokens))),
+    )
+
+
+def _choose_backend(
+    tn: TensorNetwork, choice: LayerChoice, tiling: Tiling
+) -> str:
+    if max(g.macs for g in choice.path.gemms) < MIN_KERNEL_MACS:
+        return "jnp"
+    if streaming_fits(tn, choice.path.steps, tiling.block_tokens):
+        return "streaming_tt"
+    return "tt_gemm"
+
+
+def _steps_in_range(n_nodes: int, steps) -> bool:
+    """Replay current-index bookkeeping: every (i, j) must name two
+    distinct live nodes (the merged node is appended, shrinking the list
+    by one per step)."""
+    n = n_nodes
+    for (i, j) in steps:
+        if i == j or not (0 <= i < n and 0 <= j < n):
+            return False
+        n -= 1
+    return n == 1
+
+
+def validate_plan(
+    plan,
+    named_layers: Sequence[tuple[str, TensorNetwork]],
+) -> list[str]:
+    """Structural compatibility of a plan with a model's layer networks.
+
+    Returns human-readable problem strings (empty = compatible): a plan
+    layer whose step count cannot contract the model's network (emitted
+    for a different TT geometry / smoke setting), or a plan that matches
+    no projection at all.  Called by the serve/train drivers before
+    installing — a mismatched plan should fail loudly, not replay bogus
+    steps deep inside tracing.
+    """
+    families: dict[str, TensorNetwork] = {}
+    for inst_name, tn in named_layers:
+        families.setdefault(base_name(inst_name), tn)
+    problems = []
+    matched = 0
+    for lp in plan.layers:
+        tn = families.get(lp.name)
+        if tn is None:
+            continue  # plans may cover projections this model lacks
+        matched += 1
+        if not lp.path_steps:
+            if lp.backend == "jnp":
+                continue  # index-only entry: steps resolve at trace time
+            problems.append(
+                f"{lp.name}: backend {lp.backend!r} requires path_steps "
+                "(only jnp entries may be index-only)")
+            continue
+        if len(lp.path_steps) != len(tn.nodes) - 1:
+            problems.append(
+                f"{lp.name}: plan has {len(lp.path_steps)} contraction steps "
+                f"but the model's network needs {len(tn.nodes) - 1} "
+                "(plan emitted for a different TT geometry or smoke setting?)")
+        elif not _steps_in_range(len(tn.nodes), lp.path_steps):
+            problems.append(
+                f"{lp.name}: plan step indices {list(map(list, lp.path_steps))} "
+                "do not describe a valid pairwise contraction of "
+                f"{len(tn.nodes)} nodes (corrupted or hand-edited plan?)")
+    if matched == 0:
+        problems.append(
+            "plan matches no tensorized projection of this model "
+            f"(plan layers: {sorted(lp.name for lp in plan.layers)})")
+    return problems
+
+
+def check_plan_for_config(plan, arch: str, cfg) -> list[str]:
+    """Driver-side guard: is ``plan`` installable for (arch, cfg)?
+
+    Combines the arch provenance check with :func:`validate_plan` over
+    the model's actual tensorized projections.  LLM layer names collide
+    across architectures (every transformer has an ``attn.wq``), so name
+    matching alone would let a foreign plan install silently.
+    """
+    problems = []
+    if plan.arch and plan.arch != arch:
+        problems.append(
+            f"plan was emitted for arch {plan.arch!r}, not {arch!r}")
+    from repro.dse_cli import model_dse_layers
+
+    try:
+        named = model_dse_layers(cfg, tokens=8)
+    except ValueError as e:
+        problems.append(str(e.args[0] if e.args else e))
+        return problems
+    problems.extend(validate_plan(plan, named))
+    return problems
+
+
+def compile_plan(
+    named_layers: Sequence[tuple[str, TensorNetwork]],
+    result: DSEResult,
+    hw: HardwareConfig,
+    *,
+    arch: str = "",
+    objective: str = "latency",
+    tokens: int = 0,
+    backend: str = "auto",
+    total_latency_s: Optional[float] = None,
+) -> ExecutionPlan:
+    """Compile a DSE result into an installable :class:`ExecutionPlan`.
+
+    ``named_layers`` are the (instance_name, network) problems the search
+    ran over, aligned with ``result.choices``.  ``backend`` forces every
+    layer onto one executor (``"auto"`` = per-layer heuristic).
+    """
+    if backend != "auto" and backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; have {('auto',) + BACKENDS}")
+    if len(named_layers) != len(result.choices):
+        raise ValueError(
+            f"{len(named_layers)} layers vs {len(result.choices)} choices")
+
+    by_family: dict[str, LayerPlan] = {}
+    counts: dict[str, int] = {}
+    for (inst_name, tn), choice in zip(named_layers, result.choices):
+        name = base_name(inst_name)
+        counts[name] = counts.get(name, 0) + 1
+        if name in by_family:
+            prev = by_family[name]
+            if (prev.path_steps != choice.path.steps
+                    or prev.dataflow != choice.dataflow.value
+                    or prev.partitioning != tuple(choice.partitioning)):
+                raise ValueError(
+                    f"instances of {name!r} received divergent DSE choices; "
+                    "cannot collapse to one scanned layer plan")
+            continue
+        tiling = _choose_tiling(choice, tokens or batch_dim(tn))
+        be = backend if backend != "auto" else _choose_backend(tn, choice, tiling)
+        by_family[name] = LayerPlan(
+            name=name,
+            path_index=choice.path_index,
+            path_steps=tuple(tuple(s) for s in choice.path.steps),
+            dataflow=choice.dataflow.value,
+            partitioning=tuple(choice.partitioning),
+            backend=be,
+            tiling=tiling,
+            macs=choice.path.macs,
+            latency_s=choice.latency_s,
+        )
+
+    layers = tuple(
+        dataclasses.replace(lp, instances=counts[lp.name])
+        for lp in by_family.values()
+    )
+    return ExecutionPlan(
+        layers=layers,
+        arch=arch,
+        hw=hw.name,
+        objective=objective,
+        strategy=result.strategy,
+        tokens=tokens,
+        total_latency_s=(result.total_latency_s if total_latency_s is None
+                         else total_latency_s),
+    )

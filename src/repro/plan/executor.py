@@ -1,0 +1,169 @@
+"""Planned execution: route a TT contraction through its LayerPlan backend.
+
+Entry point is :func:`planned_tt_linear` — called by
+``repro.nn.linear.linear_apply`` when a plan entry is installed for the
+projection.  Three backends:
+
+- ``jnp``        — the pure-jnp reference executor (``kernels/ref.py``)
+                   along the plan's path steps: numerical ground truth.
+- ``streaming_tt`` — the fused in-VMEM Pallas kernel: cores pinned whole
+                   in VMEM, activations streamed in ``block_tokens``
+                   blocks, the entire searched path unrolled inside the
+                   kernel body (``kernels/streaming_tt.py``).
+- ``tt_gemm``    — every pairwise contraction of the path lowered to the
+                   dataflow-configurable Pallas GEMM
+                   (``kernels/tt_gemm.py``) with the plan's IS/OS/WS grid
+                   order and <T_M, T_K, T_N> block shapes.  Any pairwise
+                   tensor contraction *is* a GEMM (free-edges x
+                   shared-edges reshape), which is the paper's §3.1 view.
+
+Every planned call appends a record to a trace-time execution log —
+``execution_log()`` — so callers (tests, the serve driver) can assert
+*which* path/dataflow/kernel actually executed.  Under ``jit`` the record
+is appended once per trace, not per step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contraction import core_tensors, execute_path
+from repro.core.paths import CandidatePath
+from repro.core.tensor_network import TensorNetwork, tt_linear_network
+from repro.kernels import ops, ref
+
+from .schema import LayerPlan
+
+# ---------------------------------------------------------------------------
+# trace-time execution log
+# ---------------------------------------------------------------------------
+
+_EXEC_LOG: list[dict] = []
+
+
+def reset_execution_log() -> None:
+    _EXEC_LOG.clear()
+
+
+def execution_log() -> tuple[dict, ...]:
+    """Records of planned executions since the last reset (trace-time)."""
+    return tuple(_EXEC_LOG)
+
+
+def record_execution(lp: LayerPlan, tokens: int) -> None:
+    """Append one planned-execution record (called at trace time)."""
+    _EXEC_LOG.append({
+        "name": lp.name,
+        "backend": lp.backend,
+        "dataflow": lp.dataflow,
+        "path_index": lp.path_index,
+        "path_steps": lp.path_steps,
+        "tokens": tokens,
+    })
+
+
+# ---------------------------------------------------------------------------
+# path plumbing
+# ---------------------------------------------------------------------------
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _clamp_block(block: int, dim: int) -> int:
+    """Shrink a compile-time block to the runtime dim (power of two, >= 8).
+
+    The DSE tiles for its search-time token count; at execution time a
+    decode step may carry only a handful of tokens, and padding it up to
+    the full plan block would compute mostly zeros.  Clamping to the next
+    power of two >= dim keeps a single (minimally padded) block.
+    """
+    return max(8, min(block, _next_pow2(dim)))
+
+
+def as_candidate_path(tn: TensorNetwork, steps) -> CandidatePath:
+    """Reconstruct a CandidatePath (with GEMM shapes) from raw plan steps."""
+    steps = tuple(tuple(s) for s in steps)
+    gemms = tuple(tn.gemm_sequence(steps))
+    return CandidatePath(steps, sum(g.macs for g in gemms), gemms)
+
+
+def _gemm_contract(lp: LayerPlan, interpret: Optional[bool]):
+    """A per-step ``contract_fn`` for ``execute_path`` that lowers each
+    pairwise contraction to the dataflow-configurable Pallas GEMM.
+
+    Operands are transposed to (free..., shared...) / (shared..., free...)
+    and flattened to (M, K) @ (K, N); the result keeps tensordot's axis
+    order (A's free axes then B's), so all the edge bookkeeping stays in
+    ``core.contraction.execute_path``.
+    """
+
+    def contract(ta: jax.Array, tb: jax.Array, axes) -> jax.Array:
+        ax_a, ax_b = axes
+        a_free = [i for i in range(ta.ndim) if i not in ax_a]
+        b_free = [i for i in range(tb.ndim) if i not in ax_b]
+        a_dims = [ta.shape[i] for i in a_free]
+        b_dims = [tb.shape[i] for i in b_free]
+        m = math.prod(a_dims) if a_dims else 1
+        n = math.prod(b_dims) if b_dims else 1
+        k = math.prod(ta.shape[i] for i in ax_a) if ax_a else 1
+        a2 = jnp.transpose(ta, a_free + list(ax_a)).reshape(m, k)
+        b2 = jnp.transpose(tb, list(ax_b) + b_free).reshape(k, n)
+        c2 = ops.gemm(a2, b2, dataflow=lp.dataflow,
+                      block_m=_clamp_block(lp.tiling.block_m, m),
+                      block_k=_clamp_block(lp.tiling.block_k, k),
+                      block_n=_clamp_block(lp.tiling.block_n, n),
+                      interpret=interpret)
+        return c2.reshape(tuple(a_dims) + tuple(b_dims))
+
+    return contract
+
+
+# ---------------------------------------------------------------------------
+# the planned TT-linear entry point
+# ---------------------------------------------------------------------------
+
+def planned_tt_linear(
+    lp: LayerPlan,
+    x2d: jax.Array,
+    cores: Sequence[jax.Array],
+    in_modes: tuple[int, ...],
+    out_modes: tuple[int, ...],
+    ranks: tuple[int, ...],
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Apply one planned TT projection to ``x2d: (tokens, d_in)``.
+
+    Returns ``(tokens, d_out)``.  The plan's ``path_steps`` are replayed
+    verbatim; the backend decides *how* each step runs.
+    """
+    tokens = x2d.shape[0]
+    record_execution(lp, tokens)
+
+    if lp.backend == "streaming_tt":
+        bt = _clamp_block(lp.tiling.block_tokens, tokens)
+        tn_block = tt_linear_network(bt, in_modes, out_modes, ranks)
+        path = as_candidate_path(tn_block, lp.path_steps)
+        return ops.tt_linear(x2d, cores, tn_block, path,
+                             block_tokens=bt, interpret=interpret)
+
+    tn = tt_linear_network(tokens, in_modes, out_modes, ranks)
+    if lp.backend == "tt_gemm":
+        tensors = {"X": x2d.reshape((tokens,) + tuple(in_modes))}
+        tensors.update(core_tensors(tn, cores))
+        out_edges = ("b",) + tuple(f"i{t + 1}" for t in range(len(out_modes)))
+        y = execute_path(tn, lp.path_steps, tensors, out_edges=out_edges,
+                         contract_fn=_gemm_contract(lp, interpret))
+        return y.reshape(tokens, -1)
+
+    # "jnp": the reference executor along the planned steps
+    path = as_candidate_path(tn, lp.path_steps)
+    return ref.tt_linear_ref(x2d, cores, tn, path)

@@ -1,0 +1,219 @@
+"""ExecutionPlan schema: the deployable artifact of the DSE.
+
+A plan is the bridge between *search* and *execute*: ``python -m repro.dse
+--emit-plan`` compiles the winning ``DSEResult`` into one
+:class:`ExecutionPlan`, and ``launch/serve.py --plan`` installs it so the
+model's TT projections contract along the searched path, through the
+searched kernel backend, with the searched dataflow and tiling.
+
+The JSON wire format is versioned and documented in
+``docs/plan_format.md``; serialization is *canonical* (sorted keys,
+fixed indentation) so that serialize -> deserialize -> re-serialize is
+byte-identical — the round-trip property ``tests/test_plan.py`` asserts.
+
+Layer plans are keyed by the projection's ``LinearSpec.name``
+(``attn.wq``, ``mlp.wd``, ``head``, ...).  The DSE explores one problem
+per layer *instance* (``attn.wq[0]``, ``attn.wq[1]``, ...), but the model
+executes repeated blocks under one ``lax.scan`` — all instances share one
+trace — so the compiler collapses instances to a single entry per
+projection family (identical networks get identical argmins, making the
+collapse lossless).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Mapping, Optional, Sequence
+
+#: bump when the wire format changes incompatibly
+PLAN_FORMAT_VERSION = 1
+
+#: executor backends a layer plan may name
+BACKENDS = ("jnp", "tt_gemm", "streaming_tt")
+
+_DATAFLOWS = ("IS", "OS", "WS")
+
+
+@dataclasses.dataclass(frozen=True)
+class Tiling:
+    """Kernel tiling decision <T_M, T_K, T_N> (+ token block).
+
+    ``block_m/k/n`` drive the ``tt_gemm`` BlockSpecs; ``block_tokens`` is
+    the streamed token-block size of the ``streaming_tt`` kernel.  The
+    ``jnp`` backend ignores all four.
+    """
+
+    block_m: int = 128
+    block_k: int = 128
+    block_n: int = 128
+    block_tokens: int = 256
+
+    def __post_init__(self) -> None:
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"tiling.{f.name} must be a positive int, got {v!r}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "Tiling":
+        return cls(**{f.name: int(d[f.name]) for f in dataclasses.fields(cls)})
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Deployment decision for one projection family.
+
+    ``path_steps`` makes the plan self-contained: the pairwise contraction
+    order is replayed verbatim at execution time (current-index semantics
+    of ``TensorNetwork.contract_pair``), independent of path-search
+    determinism.  ``path_index`` is provenance — the candidate's rank in
+    the MAC-sorted top-K list (0 = MAC-optimal).
+    """
+
+    name: str
+    path_index: int
+    path_steps: tuple[tuple[int, int], ...]
+    dataflow: str                      # "IS" | "OS" | "WS"
+    partitioning: tuple[int, int]      # (1,1) | (1,2) | (2,1)
+    backend: str                       # "jnp" | "tt_gemm" | "streaming_tt"
+    tiling: Tiling = Tiling()
+    # provenance (not used by the executor)
+    macs: int = 0
+    latency_s: float = 0.0
+    instances: int = 1
+
+    def __post_init__(self) -> None:
+        if self.dataflow not in _DATAFLOWS:
+            raise ValueError(f"{self.name}: unknown dataflow {self.dataflow!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"{self.name}: unknown backend {self.backend!r}")
+        if len(self.partitioning) != 2:
+            raise ValueError(f"{self.name}: partitioning must be (rows, cols)")
+        for s in self.path_steps:
+            if len(s) != 2:
+                raise ValueError(f"{self.name}: malformed path step {s!r}")
+
+    def with_backend(self, backend: str) -> "LayerPlan":
+        return dataclasses.replace(self, backend=backend)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "path_index": self.path_index,
+            "path_steps": [list(s) for s in self.path_steps],
+            "dataflow": self.dataflow,
+            "partitioning": list(self.partitioning),
+            "backend": self.backend,
+            "tiling": self.tiling.to_json(),
+            "macs": self.macs,
+            "latency_s": self.latency_s,
+            "instances": self.instances,
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "LayerPlan":
+        return cls(
+            name=str(d["name"]),
+            path_index=int(d["path_index"]),
+            path_steps=tuple((int(i), int(j)) for i, j in d["path_steps"]),
+            dataflow=str(d["dataflow"]),
+            partitioning=(int(d["partitioning"][0]), int(d["partitioning"][1])),
+            backend=str(d["backend"]),
+            tiling=Tiling.from_json(d["tiling"]),
+            macs=int(d.get("macs", 0)),
+            latency_s=float(d.get("latency_s", 0.0)),
+            instances=int(d.get("instances", 1)),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """The installable compilation of one DSE run."""
+
+    layers: tuple[LayerPlan, ...]
+    arch: str = ""
+    hw: str = ""
+    objective: str = "latency"
+    strategy: str = ""
+    tokens: int = 0
+    total_latency_s: float = 0.0
+    version: int = PLAN_FORMAT_VERSION
+
+    def __post_init__(self) -> None:
+        names = [lp.name for lp in self.layers]
+        if len(set(names)) != len(names):
+            dup = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate layer plans for {dup}")
+
+    def layer(self, name: str) -> Optional[LayerPlan]:
+        for lp in self.layers:
+            if lp.name == name:
+                return lp
+        return None
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(lp.name for lp in self.layers)
+
+    def with_backend(self, backend: str) -> "ExecutionPlan":
+        """A copy with every layer forced onto ``backend``."""
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        return dataclasses.replace(
+            self, layers=tuple(lp.with_backend(backend) for lp in self.layers))
+
+    # -- canonical JSON round-trip ----------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "format": "repro.execution_plan",
+            "version": self.version,
+            "arch": self.arch,
+            "hw": self.hw,
+            "objective": self.objective,
+            "strategy": self.strategy,
+            "tokens": self.tokens,
+            "total_latency_s": self.total_latency_s,
+            "layers": [lp.to_json() for lp in self.layers],
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "ExecutionPlan":
+        fmt = d.get("format", "repro.execution_plan")
+        if fmt != "repro.execution_plan":
+            raise ValueError(f"not an execution plan (format={fmt!r})")
+        version = int(d.get("version", -1))
+        if version != PLAN_FORMAT_VERSION:
+            raise ValueError(
+                f"plan format version {version} unsupported "
+                f"(this build reads version {PLAN_FORMAT_VERSION})")
+        return cls(
+            layers=tuple(LayerPlan.from_json(l) for l in d["layers"]),
+            arch=str(d.get("arch", "")),
+            hw=str(d.get("hw", "")),
+            objective=str(d.get("objective", "latency")),
+            strategy=str(d.get("strategy", "")),
+            tokens=int(d.get("tokens", 0)),
+            total_latency_s=float(d.get("total_latency_s", 0.0)),
+            version=version,
+        )
+
+    def dumps(self) -> str:
+        """Canonical serialization (stable across round-trips)."""
+        return json.dumps(self.to_json(), indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def loads(cls, text: str) -> "ExecutionPlan":
+        return cls.from_json(json.loads(text))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.dumps())
+
+
+def load_plan(path: str) -> ExecutionPlan:
+    with open(path) as f:
+        return ExecutionPlan.loads(f.read())

@@ -57,7 +57,10 @@ class ShardingRules:
             axes = tuple(a for a in axes if a not in used)
             prod = math.prod(self.axis_sizes.get(a, 1) for a in axes)
             if axes and prod > 1 and dim % prod == 0:
-                spec.append(axes if len(axes) > 1 else axes[0])
+                # "tokens" is semantically a *merged* (batch x seq) dim, so
+                # its spec entry stays a tuple even with one mesh axis
+                spec.append(axes if (len(axes) > 1 or logical == "tokens")
+                            else axes[0])
                 used.update(axes)
             else:
                 spec.append(None)
