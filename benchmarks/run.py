@@ -23,6 +23,7 @@ from . import (
     table2_dse_choices,
     table3_latency,
     table4_efficiency,
+    table5_training_latency,
 )
 
 SUITES = {
@@ -30,6 +31,7 @@ SUITES = {
     "table2": table2_dse_choices.run,
     "table3": table3_latency.run,
     "table4": table4_efficiency.run,
+    "table5": table5_training_latency.run,
     "fig3": fig3_paths.run,
     "fig5": fig5_dataflow.run,
     "dse_overhead": bench_dse_overhead.run,

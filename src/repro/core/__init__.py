@@ -29,9 +29,23 @@ from .simulator import (
 )
 from .tpu_cost import TPU_V5E
 from .cost_table import (
+    BackwardChoice,
     CostTables,
+    TrainCostTables,
     build_cost_table_vectorized,
     build_cost_tables,
+    build_train_cost_tables,
+)
+from .backward import (
+    BackwardProblem,
+    LayerBackward,
+    TrainCostWeights,
+    backward_networks,
+    grad_core_network,
+    grad_input_network,
+    layer_backward,
+    memoised_layer_backwards,
+    update_seconds,
 )
 from .dse import (
     DSEResult,
@@ -54,6 +68,10 @@ __all__ = [
     "layer_latency", "simulate", "TPU_V5E",
     "CostTables", "build_cost_table", "build_cost_table_vectorized",
     "build_cost_tables",
+    "BackwardChoice", "TrainCostTables", "build_train_cost_tables",
+    "BackwardProblem", "LayerBackward", "TrainCostWeights",
+    "backward_networks", "grad_core_network", "grad_input_network",
+    "layer_backward", "memoised_layer_backwards", "update_seconds",
     "DSEResult", "LayerChoice", "brute_force_search", "explore_model",
     "global_search", "pareto_front",
     "TTMatrix", "reconstruction_error", "tt_rand", "tt_svd",

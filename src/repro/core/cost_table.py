@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Mapping, Sequence
+from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -239,3 +239,139 @@ def build_cost_table_vectorized(
 ) -> dict[Key, float]:
     """Drop-in replacement for the scalar ``dse.build_cost_table`` loop."""
     return build_cost_tables(layer_paths, hw, partitionings, dataflows).seconds
+
+
+# ---------------------------------------------------------------------------
+# training cost tables: fwd + bwd + grad-update (paper's training objective)
+# ---------------------------------------------------------------------------
+
+#: backward-table key — (layer, partitioning, dataflow); the backward term
+#: is independent of the *forward* path choice (gradients contract directly
+#: from X / dY / cores, no stashed forward intermediates)
+BwdKey = tuple[int, Partitioning, Dataflow]
+
+
+@dataclasses.dataclass(frozen=True)
+class BackwardChoice:
+    """Argmin path for one backward problem under a fixed (c, d)."""
+
+    wrt: str                      # "dx" | core node name
+    path_index: int
+    path: CandidatePath
+    latency_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCostTables:
+    """Fwd + bwd + update decomposition of the training-latency objective.
+
+    ``fwd`` is the usual inference table; ``bwd_seconds[(l, c, d)]`` is the
+    sum over the layer's backward problems of each problem's best candidate
+    path, evaluated on the *same* partitioning/dataflow as the forward (one
+    hardware configuration per layer per step — the per-problem *path* is
+    free, the dataflow is the layer's).  ``bwd_choices`` records those
+    per-problem argmin paths; ``update_seconds[l]`` is the DRAM-bound
+    optimizer update.  ``bwd_traffic_words`` mirrors the forward table's
+    traffic field (the EDP ingredient) so a train-EDP objective can be
+    assembled without rebuilding; nothing consumes it yet.
+    """
+
+    fwd: CostTables
+    bwd_seconds: dict[BwdKey, float]
+    bwd_traffic_words: dict[BwdKey, float]
+    bwd_choices: dict[BwdKey, tuple[BackwardChoice, ...]]
+    bwd_macs: dict[int, int]           # l -> sum of each problem's min-MAC path
+    update_seconds: dict[int, float]
+    weights: "TrainCostWeights"
+    build_seconds: float
+
+    def train_seconds(self) -> dict[Key, float]:
+        """The joint objective over the forward table's key space:
+
+        ``T[l, p, c, d] = w_f * fwd + w_b * bwd(l, c, d) + w_u * update(l)``
+        """
+        w = self.weights
+        return {
+            (l, p, c, d): (w.fwd * s
+                           + w.bwd * self.bwd_seconds[(l, c, d)]
+                           + w.update * self.update_seconds[l])
+            for (l, p, c, d), s in self.fwd.seconds.items()
+        }
+
+
+def build_train_cost_tables(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    layer_backwards: Sequence,            # Sequence[backward.LayerBackward]
+    hw: HardwareConfig,
+    partitionings: Sequence[Partitioning] = ALL_PARTITIONINGS,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+    weights: Optional["TrainCostWeights"] = None,
+) -> TrainCostTables:
+    """Populate the training-latency decomposition with batched evaluation.
+
+    Backward problems are flattened into one pseudo-layer list and pushed
+    through the same vectorized engine as the forward table, so identical
+    backward networks across a transformer stack (and across problems)
+    dedup exactly like forward layers do.
+    """
+    from .backward import TrainCostWeights, update_seconds as _upd
+
+    t0 = time.perf_counter()
+    if len(layer_paths) != len(layer_backwards):
+        raise ValueError(
+            f"{len(layer_paths)} forward layers vs "
+            f"{len(layer_backwards)} backward layer problems")
+    weights = weights or TrainCostWeights()
+    partitionings = tuple(partitionings)
+    dataflows = tuple(dataflows)
+
+    fwd = build_cost_tables(layer_paths, hw, partitionings, dataflows)
+
+    # flatten (layer, problem) -> pseudo-layer row for the batched engine
+    flat_paths: list[Sequence[CandidatePath]] = []
+    flat_owner: list[tuple[int, int]] = []     # (layer, problem index)
+    for l, lb in enumerate(layer_backwards):
+        for m, prob in enumerate(lb.problems):
+            flat_paths.append(prob.paths)
+            flat_owner.append((l, m))
+    bwd_tables = build_cost_tables(flat_paths, hw, partitionings, dataflows)
+
+    bwd_seconds: dict[BwdKey, float] = {}
+    bwd_traffic: dict[BwdKey, float] = {}
+    bwd_choices: dict[BwdKey, tuple[BackwardChoice, ...]] = {}
+    bwd_macs: dict[int, int] = {}
+    for l, lb in enumerate(layer_backwards):
+        bwd_macs[l] = sum(
+            min(p.macs for p in prob.paths) for prob in lb.problems)
+    for c in partitionings:
+        for d in dataflows:
+            per_layer: dict[int, list[BackwardChoice]] = {}
+            per_layer_traffic: dict[int, float] = {}
+            for flat_l, (l, m) in enumerate(flat_owner):
+                prob = layer_backwards[l].problems[m]
+                lat, q = min(
+                    (bwd_tables.seconds[(flat_l, q, c, d)], q)
+                    for q in range(len(prob.paths))
+                )
+                per_layer.setdefault(l, []).append(
+                    BackwardChoice(prob.wrt, q, prob.paths[q], lat))
+                per_layer_traffic[l] = (
+                    per_layer_traffic.get(l, 0.0)
+                    + bwd_tables.traffic_words[(flat_l, q, c, d)])
+            for l, choices in per_layer.items():
+                key = (l, c, d)
+                bwd_seconds[key] = sum(ch.latency_s for ch in choices)
+                bwd_choices[key] = tuple(choices)
+                bwd_traffic[key] = per_layer_traffic[l]
+
+    upd = {l: _upd(lb.n_params, hw) for l, lb in enumerate(layer_backwards)}
+    return TrainCostTables(
+        fwd=fwd,
+        bwd_seconds=bwd_seconds,
+        bwd_traffic_words=bwd_traffic,
+        bwd_choices=bwd_choices,
+        bwd_macs=bwd_macs,
+        update_seconds=upd,
+        weights=weights,
+        build_seconds=time.perf_counter() - t0,
+    )

@@ -32,7 +32,13 @@ from .tensor_network import TensorNetwork
 
 @dataclasses.dataclass(frozen=True)
 class LayerChoice:
-    """Optimal (p, c, d) for one layer under the winning strategy."""
+    """Optimal (p, c, d) for one layer under the winning strategy.
+
+    Under the ``train-latency`` objective, ``latency_s`` is the combined
+    per-step cost and the decomposition + per-gradient backward path
+    choices are populated; under inference objectives the backward fields
+    stay empty.
+    """
 
     layer: int
     path_index: int
@@ -40,6 +46,10 @@ class LayerChoice:
     partitioning: Partitioning
     dataflow: Dataflow
     latency_s: float
+    backward: tuple = ()              # tuple[cost_table.BackwardChoice, ...]
+    fwd_latency_s: float = 0.0
+    bwd_latency_s: float = 0.0
+    update_latency_s: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +58,7 @@ class DSEResult:
     choices: tuple[LayerChoice, ...]
     total_latency_s: float
     cost_table: Mapping[tuple[int, int, Partitioning, Dataflow], float]
+    objective: str = "latency"
 
     @property
     def per_layer_latency(self) -> tuple[float, ...]:
@@ -98,15 +109,60 @@ def global_search(
     simulate_fn: Callable[[CandidatePath, Partitioning, Dataflow, HardwareConfig], float] = simulate,
     engine: str = "auto",
     table: Mapping[tuple[int, int, Partitioning, Dataflow], float] | None = None,
+    *,
+    objective: str = "latency",
+    layer_backwards: Sequence | None = None,
+    train_weights=None,
+    train_tables=None,
 ) -> DSEResult:
     """Algorithm 1: global strategy loop + independent per-layer argmins.
 
     ``table`` may supply a pre-built cost table (any per-config objective,
     e.g. the EDP table from ``cost_table.CostTables.edp``); by default the
     latency table is built with the selected ``engine``.
+
+    ``objective="train-latency"`` jointly optimizes the forward *and*
+    backward passes: per cell, the cost is ``w_f * fwd + w_b * bwd +
+    w_u * update`` where the backward term takes, for each gradient's
+    contraction network, its best candidate path under the layer's
+    (partitioning, dataflow).  ``layer_backwards`` (one
+    ``backward.LayerBackward`` per layer — see
+    ``backward.memoised_layer_backwards``) is required; the returned
+    choices carry the per-gradient backward paths and the
+    fwd/bwd/update latency decomposition.
     """
+    if objective not in ("latency", "train-latency"):
+        raise ValueError(
+            f"unknown objective {objective!r}; have ('latency', 'train-latency')"
+            " — EDP goes through the ``table`` argument")
     all_parts = sorted({c for cs in strategy_space.values() for c in cs})
-    if table is None:
+    train = None
+    if objective == "train-latency":
+        if table is not None:
+            raise ValueError(
+                "objective='train-latency' builds its own combined table; "
+                "a pre-built ``table`` cannot be decomposed "
+                "(pass ``train_tables`` instead)")
+        if train_tables is not None:
+            if train_weights is not None:
+                raise ValueError(
+                    "train_weights must be baked into train_tables at build "
+                    "time (build_train_cost_tables(weights=...)); passing "
+                    "both is ambiguous")
+            train = train_tables
+        else:
+            if layer_backwards is None:
+                raise ValueError(
+                    "objective='train-latency' requires layer_backwards "
+                    "(see repro.core.backward.memoised_layer_backwards) "
+                    "or a pre-built train_tables")
+            from .cost_table import build_train_cost_tables
+
+            train = build_train_cost_tables(
+                layer_paths, layer_backwards, hw, all_parts, dataflows,
+                weights=train_weights)
+        table = train.train_seconds()
+    elif table is None:
         table = build_cost_table(
             layer_paths, hw, all_parts, dataflows, simulate_fn, engine
         )
@@ -125,13 +181,23 @@ def global_search(
                 key=lambda t: t[0],
             )
             p, c, d = arg
-            choices.append(LayerChoice(l, p, paths[p], c, d, lat))
+            if train is not None:
+                w = train.weights
+                choices.append(LayerChoice(
+                    l, p, paths[p], c, d, lat,
+                    backward=train.bwd_choices[(l, c, d)],
+                    fwd_latency_s=w.fwd * train.fwd.seconds[(l, p, c, d)],
+                    bwd_latency_s=w.bwd * train.bwd_seconds[(l, c, d)],
+                    update_latency_s=w.update * train.update_seconds[l],
+                ))
+            else:
+                choices.append(LayerChoice(l, p, paths[p], c, d, lat))
             cost_h += lat
         if cost_h < best_cost:
             best_cost = cost_h
             best = (h, tuple(choices))
     assert best is not None
-    return DSEResult(best[0], best[1], best_cost, table)
+    return DSEResult(best[0], best[1], best_cost, table, objective)
 
 
 def brute_force_search(
@@ -171,10 +237,18 @@ def explore_model(
     strategy_space: Mapping[str, Sequence[Partitioning]] = STRATEGY_SPACE,
     dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
     engine: str = "auto",
+    objective: str = "latency",
 ) -> DSEResult:
     """End-to-end DSE for a model given per-layer tensor networks."""
     layer_paths = [find_topk_paths(tn, k=top_k) for tn in networks]
-    return global_search(layer_paths, hw, strategy_space, dataflows, engine=engine)
+    layer_backwards = None
+    if objective == "train-latency":
+        from .backward import memoised_layer_backwards
+
+        layer_backwards = memoised_layer_backwards(networks, k=top_k)
+    return global_search(layer_paths, hw, strategy_space, dataflows,
+                         engine=engine, objective=objective,
+                         layer_backwards=layer_backwards)
 
 
 def pareto_front(points: Sequence[tuple[float, float]]) -> list[int]:

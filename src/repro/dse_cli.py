@@ -43,6 +43,7 @@ from repro.nn.linear import LinearSpec
 
 HW_TARGETS = {FPGA_VU9P.name: FPGA_VU9P, TPU_V5E.name: TPU_V5E}
 OBJECTIVES = ("latency", "edp")
+MODES = ("infer", "train", "both")
 
 #: vision workloads of the paper's Tables 1-4 (model_layers-backed)
 VISION_ARCHS = ("resnet18/cifar10", "resnet18/tiny_imagenet", "vit_ti4/cifar10")
@@ -159,14 +160,55 @@ def run_dse(
     tokens: Optional[int] = None,
     smoke: bool = False,
     engine: str = "vectorized",
+    mode: str = "infer",
 ) -> dict:
     """Run Algorithm 1 end-to-end; returns the JSON-serializable report.
 
     ``tokens`` is the streamed token count per projection (default 1024);
     for vision archs it is the im2col batch size (default 1).
+
+    ``mode="train"`` optimizes the training step (joint fwd+bwd+update —
+    per-layer reports carry the latency decomposition and the backward
+    path choices); ``"both"`` runs both searches and nests their reports
+    under ``"infer"`` / ``"train"`` with the layers whose choices diverge.
     """
-    report, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens, smoke, engine)
+    if mode == "both":
+        _check_train_compatible(objective, engine)  # fail before any search
+        infer, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens, smoke,
+                                  engine, "infer")
+        train, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens, smoke,
+                                  engine, "train")
+        return _both_report(infer, train)
+    report, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens, smoke,
+                               engine, mode)
     return report
+
+
+def _both_report(infer: dict, train: dict) -> dict:
+    """Combined infer+train report with the per-layer choice divergence."""
+    div = []
+    train_by_name = {l["name"]: l for l in train["layers"]}
+    for li in infer["layers"]:
+        lt = train_by_name.get(li["name"])
+        if lt is None:
+            continue
+        delta = {
+            k: [li[k], lt[k]]
+            for k in ("path_index", "partitioning", "dataflow")
+            if li[k] != lt[k]
+        }
+        if delta:
+            div.append({"name": li["name"], **delta})
+    return {
+        "arch": infer["arch"],
+        "hw": infer["hw"],
+        "mode": "both",
+        "tokens": infer["tokens"],
+        "infer": infer,
+        "train": train,
+        "divergent_layers": div,
+        "n_divergent_layers": len(div),
+    }
 
 
 def run_dse_plan(
@@ -178,27 +220,56 @@ def run_dse_plan(
     smoke: bool = False,
     engine: str = "vectorized",
     plan_backend: str = "auto",
+    mode: str = "infer",
 ):
     """Run the DSE and compile its result into an ExecutionPlan.
 
     Returns ``(report, plan)`` — the same report as :func:`run_dse` plus
     the installable plan (``repro.plan.ExecutionPlan``).  This is the
     search->compile half of the deploy loop; ``launch/serve.py --plan``
-    is the install->execute half.
+    / ``launch/train.py --plan`` is the install->execute half.  Under
+    ``mode="train"`` (or ``"both"``) the emitted plan is schema v2 with
+    per-layer backward paths/backends/tilings.
     """
-    from repro.plan import compile_plan
+    from repro.plan import BACKENDS, compile_plan
 
+    if plan_backend != "auto" and plan_backend not in BACKENDS:
+        raise ValueError(
+            f"unknown plan backend {plan_backend!r}; have "
+            f"{('auto',) + BACKENDS}")
+    if mode not in MODES:
+        raise KeyError(f"unknown mode {mode!r}; have {MODES}")
+    infer_report = None
+    if mode == "both":
+        _check_train_compatible(objective, engine)  # fail before any search
+        infer_report, _, _, _ = _run_dse(
+            arch, hw, top_k, objective, tokens, smoke, engine, "infer")
+    plan_mode = "train" if mode in ("train", "both") else "infer"
     report, named, res, hw_cfg = _run_dse(
-        arch, hw, top_k, objective, tokens, smoke, engine)
+        arch, hw, top_k, objective, tokens, smoke, engine, plan_mode)
     plan = compile_plan(
         named, res, hw_cfg,
         arch=arch,
-        objective=objective,
+        objective=report["objective"],
         tokens=report["tokens"],
         backend=plan_backend,
         total_latency_s=report["total_latency_s"],
     )
+    if mode == "both":
+        report = _both_report(infer_report, report)
     return report, plan
+
+
+def _check_train_compatible(objective: str, engine: str) -> None:
+    """Reject mode/objective/engine combinations the train search cannot
+    honour — called up front so ``--mode both`` fails before the (valid)
+    inference leg burns any search time."""
+    if objective != "latency":
+        raise ValueError(
+            "--mode train optimizes the train-latency objective; "
+            "--objective edp is an inference objective")
+    if engine == "scalar":
+        raise ValueError("--mode train requires the vectorized engine")
 
 
 def _run_dse(
@@ -209,14 +280,19 @@ def _run_dse(
     tokens: Optional[int] = None,
     smoke: bool = False,
     engine: str = "vectorized",
+    mode: str = "infer",
 ):
     """Shared pipeline; returns (report, named_layers, DSEResult, hw_cfg)."""
     if hw not in HW_TARGETS:
         raise KeyError(f"unknown hw {hw!r}; have {sorted(HW_TARGETS)}")
     if objective not in OBJECTIVES:
         raise KeyError(f"unknown objective {objective!r}; have {OBJECTIVES}")
+    if mode not in ("infer", "train"):
+        raise KeyError(f"unknown mode {mode!r}; have {MODES}")
     if engine == "scalar" and objective == "edp":
         raise ValueError("objective=edp requires the vectorized engine")
+    if mode == "train":
+        _check_train_compatible(objective, engine)
     hw_cfg = HW_TARGETS[hw]
 
     if arch in VISION_ARCHS:
@@ -246,7 +322,21 @@ def _run_dse(
 
     # stage 2 — batched cost table (scalar engine kept for benchmarking)
     all_parts = ALL_PARTITIONINGS
-    if engine == "scalar":
+    train_tables = None
+    if mode == "train":
+        from repro.core import build_train_cost_tables, memoised_layer_backwards
+
+        t0 = time.perf_counter()
+        layer_backwards = memoised_layer_backwards(
+            [tn for _, tn in named], k=top_k)
+        bwd_search_s = time.perf_counter() - t0
+        path_search_s += bwd_search_s
+        train_tables = build_train_cost_tables(
+            layer_paths, layer_backwards, hw_cfg, all_parts)
+        tables = train_tables.fwd
+        seconds_table = tables.seconds
+        table_build_s = train_tables.build_seconds
+    elif engine == "scalar":
         t0 = time.perf_counter()
         seconds_table = build_cost_table(
             layer_paths, hw_cfg, all_parts, engine="scalar"
@@ -262,7 +352,11 @@ def _run_dse(
 
     # stage 3 — hierarchical global argmin over the chosen objective
     t0 = time.perf_counter()
-    res = global_search(layer_paths, hw_cfg, table=obj_table)
+    if mode == "train":
+        res = global_search(layer_paths, hw_cfg, objective="train-latency",
+                            train_tables=train_tables)
+    else:
+        res = global_search(layer_paths, hw_cfg, table=obj_table)
     argmin_s = time.perf_counter() - t0
 
     layers = []
@@ -270,9 +364,10 @@ def _run_dse(
     for (name, _), choice in zip(named, res.choices):
         key = (choice.layer, choice.path_index, choice.partitioning,
                choice.dataflow)
-        latency_s = seconds_table[key]
+        # train mode: per-step cost = fwd + bwd + update; infer: fwd only
+        latency_s = choice.latency_s if mode == "train" else seconds_table[key]
         total_latency += latency_s
-        layers.append({
+        entry = {
             "name": name,
             "path_index": choice.path_index,
             "mac_optimal_path": choice.path_index == 0,
@@ -281,11 +376,22 @@ def _run_dse(
             "dataflow": choice.dataflow.value,
             "latency_s": latency_s,
             "objective": choice.latency_s,  # == latency_s unless EDP
-        })
+        }
+        if mode == "train":
+            entry["fwd_latency_s"] = choice.fwd_latency_s
+            entry["bwd_latency_s"] = choice.bwd_latency_s
+            entry["update_latency_s"] = choice.update_latency_s
+            entry["backward"] = [
+                {"wrt": ch.wrt, "path_index": ch.path_index,
+                 "latency_s": ch.latency_s}
+                for ch in choice.backward
+            ]
+        layers.append(entry)
     report = {
         "arch": arch,
         "hw": hw,
-        "objective": objective,
+        "mode": mode,
+        "objective": "train-latency" if mode == "train" else objective,
         "top_k": top_k,
         "tokens": tokens,
         "engine": engine,
@@ -305,6 +411,13 @@ def _run_dse(
         },
         "layers": layers,
     }
+    if mode == "train":
+        report["total_fwd_latency_s"] = sum(
+            c.fwd_latency_s for c in res.choices)
+        report["total_bwd_latency_s"] = sum(
+            c.bwd_latency_s for c in res.choices)
+        report["total_update_latency_s"] = sum(
+            c.update_latency_s for c in res.choices)
     return report, named, res, hw_cfg
 
 
@@ -322,6 +435,12 @@ def _build_parser() -> argparse.ArgumentParser:
     p.add_argument("--top-k", type=int, default=4, metavar="K",
                    help="candidate paths kept per layer (default 4)")
     p.add_argument("--objective", default="latency", choices=OBJECTIVES)
+    p.add_argument("--mode", default="infer", choices=MODES,
+                   help="infer: forward-only DSE (default); train: joint "
+                        "fwd+bwd+update search (per-layer decomposition in "
+                        "the report, --emit-plan writes schema v2 with "
+                        "backward entries); both: run both and report the "
+                        "divergent layer choices")
     p.add_argument("--tokens", type=int, default=None,
                    help="streamed tokens per projection (default 1024; "
                         "vision archs: im2col batch, default 1)")
@@ -365,6 +484,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 smoke=args.smoke,
                 engine=args.engine,
                 plan_backend=args.plan_backend,
+                mode=args.mode,
             )
             plan.save(args.emit_plan)
             backends = sorted({lp.backend for lp in plan.layers})
@@ -380,6 +500,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 tokens=args.tokens,
                 smoke=args.smoke,
                 engine=args.engine,
+                mode=args.mode,
             )
     except (KeyError, ValueError) as e:
         msg = e.args[0] if e.args else e

@@ -9,6 +9,7 @@ backend unless forced.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Sequence
 
 import jax
@@ -36,7 +37,8 @@ def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("dataflow", "block_m", "block_k", "block_n", "interpret"),
+    static_argnames=("dataflow", "block_m", "block_k", "block_n", "interpret",
+                     "differentiable"),
 )
 def gemm(
     a: jax.Array,
@@ -46,14 +48,22 @@ def gemm(
     block_k: int = 128,
     block_n: int = 128,
     interpret: bool | None = None,
+    differentiable: bool = False,
 ) -> jax.Array:
-    """Dataflow-configurable GEMM; pads to block multiples and slices back."""
+    """Dataflow-configurable GEMM; pads to block multiples and slices back.
+
+    ``differentiable=True`` routes through :func:`tt_gemm.tt_gemm_vjp`
+    (custom-VJP kernel whose backward GEMMs are also Pallas calls), so
+    the whole padded call composes with ``jax.grad``; the padding and
+    slicing are plain jnp ops with standard transposes.
+    """
     interpret = _default_interpret() if interpret is None else interpret
     m, k = a.shape
     _, n = b.shape
     ap = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
     bp = _pad_to(_pad_to(b, 0, block_k), 1, block_n)
-    out = _tt_gemm.tt_gemm(
+    kernel = _tt_gemm.tt_gemm_vjp if differentiable else _tt_gemm.tt_gemm
+    out = kernel(
         ap, bp,
         dataflow=dataflow,  # type: ignore[arg-type]
         block_m=block_m, block_k=block_k, block_n=block_n,
@@ -69,12 +79,86 @@ def tt_linear(
     path: CandidatePath,
     block_tokens: int = 256,
     interpret: bool | None = None,
+    differentiable: bool = False,
+    bwd_steps=None,
 ) -> jax.Array:
-    """Streaming TT-linear; pads the token dim to the block multiple."""
+    """Streaming TT-linear; pads the token dim to the block multiple.
+
+    ``differentiable=True`` routes through
+    :func:`streaming_tt.streaming_tt_linear_vjp` (custom-VJP kernel: dx
+    streams through the same Pallas kernel, weight grads contract their
+    searched backward networks); ``bwd_steps`` optionally pins the
+    DSE-searched backward path per gradient.  Padding rows are zero, so
+    they contribute nothing to the weight gradients and their dx rows
+    are sliced away — the padded call is exact under ``jax.grad``.
+    """
     interpret = _default_interpret() if interpret is None else interpret
     tokens = x.shape[0]
     xp = _pad_to(x, 0, block_tokens)
-    y = _streaming.streaming_tt_linear(
-        xp, cores, tn, path, block_tokens=block_tokens, interpret=interpret
-    )
+    if differentiable:
+        y = _streaming.streaming_tt_linear_vjp(
+            xp, cores, tn, path, bwd_steps=bwd_steps,
+            block_tokens=block_tokens, interpret=interpret
+        )
+    else:
+        y = _streaming.streaming_tt_linear(
+            xp, cores, tn, path, block_tokens=block_tokens, interpret=interpret
+        )
     return y[:tokens]
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def clamp_block(block: int, dim: int) -> int:
+    """Shrink a compile-time block to the runtime dim (power of two, >= 8).
+
+    The DSE tiles for its search-time shapes; a runtime call may carry
+    fewer tokens (decode) or contract a smaller intermediate, and padding
+    up to the full plan block would compute mostly zeros.
+    """
+    return max(8, min(block, _next_pow2(dim)))
+
+
+def gemm_contract(
+    dataflow: str = "OS",
+    block_m: int = 128,
+    block_k: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+    differentiable: bool = False,
+):
+    """A per-step ``contract_fn`` for ``core.contraction.execute_path``
+    that lowers each pairwise tensor contraction to the dataflow-
+    configurable Pallas GEMM.
+
+    Operands are transposed to (free..., shared...) / (shared..., free...)
+    and flattened to (M, K) @ (K, N); the result keeps tensordot's axis
+    order (A's free axes then B's), so all edge bookkeeping stays in the
+    path executor.  Blocks are clamped to the runtime dims.
+    """
+
+    def contract(ta: jax.Array, tb: jax.Array, axes) -> jax.Array:
+        ax_a, ax_b = axes
+        a_free = [i for i in range(ta.ndim) if i not in ax_a]
+        b_free = [i for i in range(tb.ndim) if i not in ax_b]
+        a_dims = [ta.shape[i] for i in a_free]
+        b_dims = [tb.shape[i] for i in b_free]
+        m = math.prod(a_dims)
+        n = math.prod(b_dims)
+        k = math.prod(ta.shape[i] for i in ax_a)
+        a2 = jnp.transpose(ta, a_free + list(ax_a)).reshape(m, k)
+        b2 = jnp.transpose(tb, list(ax_b) + b_free).reshape(k, n)
+        c2 = gemm(a2, b2, dataflow=dataflow,
+                  block_m=clamp_block(block_m, m),
+                  block_k=clamp_block(block_k, k),
+                  block_n=clamp_block(block_n, n),
+                  interpret=interpret,
+                  differentiable=differentiable)
+        return c2.reshape(tuple(a_dims) + tuple(b_dims))
+
+    return contract

@@ -11,28 +11,76 @@ as a Pallas pipeline.
 The contraction path is a *static* argument: the searched pairwise order
 is unrolled at trace time inside the kernel body (the same executor as the
 pure-jnp reference, applied to VMEM block values).
+
+The streamed operand is whichever node has ``kind == "input"`` — the
+forward activations ``X``, or the output gradient ``dY`` of a
+``repro.core.backward`` dx-network (the backward pass of a TT layer is
+itself a streaming TT contraction: same pinned cores, gradient streamed).
+:func:`streaming_tt_linear_vjp` packages that into a ``jax.custom_vjp``
+so the kernel composes with ``jax.grad``.
 """
 
 from __future__ import annotations
 
 import functools
 import math
-from typing import Sequence
+from typing import Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.backward import GRAD_NODE, backward_networks
 from repro.core.contraction import execute_path
-from repro.core.paths import CandidatePath
-from repro.core.tensor_network import TensorNetwork, tt_linear_network
+from repro.core.paths import CandidatePath, find_topk_paths
+from repro.core.tensor_network import Node, TensorNetwork, tt_linear_network
+
+
+def _stream_node(tn: TensorNetwork) -> Node:
+    """The single streamed (kind == "input") node of the network."""
+    inputs = [n for n in tn.nodes if n.kind == "input"]
+    if len(inputs) != 1:
+        raise ValueError(
+            "streaming kernel needs exactly one streamed node, found "
+            f"{[n.name for n in inputs]}")
+    return inputs[0]
+
+
+def _stream_layout(tn: TensorNetwork):
+    """(stream_name, batch_edge, in_modes, out_edges, out_dim).
+
+    The streamed node must carry exactly one free (batch) edge, leading;
+    its remaining (shared) edges are the flattened inner dim of the 2-d
+    operand.  ``out_edges`` orders the result as batch edge first, then
+    the weight-side free edges in node order — the row-major layout of
+    the 2-d output.
+    """
+    x = _stream_node(tn)
+    free = set(tn.free_edges)
+    batch_edges = [e for e in x.edges if e in free]
+    if len(batch_edges) != 1 or x.edges[0] != batch_edges[0]:
+        raise ValueError(
+            f"streamed node {x.name}: need a single leading batch edge, "
+            f"got edges {x.edges} (free: {batch_edges})")
+    batch = batch_edges[0]
+    in_modes = tuple(d for e, d in zip(x.edges, x.dims) if e != batch)
+    out = [
+        (e, d)
+        for n in tn.nodes if n.kind != "input"
+        for e, d in zip(n.edges, n.dims) if e in free
+    ]
+    out_edges = (batch,) + tuple(e for e, _ in out)
+    out_dim = math.prod((d for _, d in out), start=1)
+    return x.name, batch, in_modes, out_edges, out_dim
 
 
 def _kernel(
     *refs,
     tn: TensorNetwork,
     path: CandidatePath,
+    stream_name: str,
     in_modes: tuple[int, ...],
+    out_edges: tuple[str, ...],
     out_dim: int,
     block_tokens: int,
 ):
@@ -40,13 +88,10 @@ def _kernel(
     core_refs = refs[1:-1]
     o_ref = refs[-1]
     x = x_ref[...].reshape((block_tokens,) + in_modes)
-    tensors = {"X": x}
-    core_names = [n.name for n in tn.nodes if n.name != "X"]
+    tensors = {stream_name: x}
+    core_names = [n.name for n in tn.nodes if n.kind != "input"]
     for name, ref in zip(core_names, core_refs):
         tensors[name] = ref[...]
-    out_edges = ("b",) + tuple(
-        f"i{t+1}" for t in range(len(tn.free_edges) - 1)
-    )
     y = execute_path(tn, path, tensors, out_edges=out_edges,
                      preferred_dtype=jnp.float32)
     o_ref[...] = y.reshape(block_tokens, out_dim).astype(o_ref.dtype)
@@ -62,21 +107,18 @@ def streaming_tt_linear(
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Apply a TT-linear layer to ``x`` (tokens, N_in) via the streaming
-    kernel.  ``tn``/``path`` must describe a batch equal to ``block_tokens``
-    (builders below handle this).  tokens must divide by ``block_tokens``.
+    """Apply a streaming TT contraction to ``x`` (tokens, N_in).
+
+    ``tn``/``path`` must describe a batch equal to ``block_tokens``
+    (builders below handle this); ``x`` is the network's streamed node
+    flattened to 2-d.  tokens must divide by ``block_tokens``.
     """
     tokens, n_in = x.shape
     if tokens % block_tokens:
         raise ValueError(f"tokens {tokens} not a multiple of {block_tokens}")
-    in_modes = tuple(
-        d for n in tn.nodes if n.name == "X" for e, d in zip(n.edges, n.dims)
-        if e != "b"
-    )
+    stream_name, _, in_modes, out_edges, out_dim = _stream_layout(tn)
     if math.prod(in_modes) != n_in:
         raise ValueError("x inner dim does not match network input modes")
-    out_dims = tn.output_dims()
-    out_dim = math.prod(d for e, d in out_dims.items() if e != "b")
     out_dtype = out_dtype or x.dtype
     grid = (tokens // block_tokens,)
 
@@ -91,7 +133,9 @@ def streaming_tt_linear(
         _kernel,
         tn=tn,
         path=path,
+        stream_name=stream_name,
         in_modes=in_modes,
+        out_edges=out_edges,
         out_dim=out_dim,
         block_tokens=block_tokens,
     )
@@ -122,3 +166,111 @@ def build_block_network(
     """The per-block tensor network the kernel contracts (batch = block)."""
     return tt_linear_network(block_tokens, tuple(in_modes), tuple(out_modes),
                              tuple(ranks))
+
+
+# ---------------------------------------------------------------------------
+# differentiable wrapper: backward pass along searched gradient networks
+# ---------------------------------------------------------------------------
+
+def streaming_tt_linear_vjp(
+    x: jax.Array,
+    cores: Sequence[jax.Array],
+    tn: TensorNetwork,
+    path: CandidatePath,
+    *,
+    bwd_steps: Optional[Mapping[str, Sequence[tuple[int, int]]]] = None,
+    block_tokens: int = 256,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """:func:`streaming_tt_linear` under a ``jax.custom_vjp``.
+
+    The backward pass contracts the layer's gradient networks
+    (``repro.core.backward``) instead of transposing the kernel:
+
+      * ``dL/dx`` streams ``dY`` through the *same* Pallas kernel against
+        the pinned cores (the dx network is itself a streaming TT
+        contraction);
+      * each ``dL/dG_k`` is contracted by the jnp path executor over the
+        whole batch (weight gradients reduce over tokens, so they stream
+        two operands and do not fit the single-stream kernel; the plan
+        executor routes them through the Pallas GEMM backend instead).
+
+    ``bwd_steps`` optionally pins the DSE-searched backward path per
+    gradient (keys ``"dx"`` / core node names); missing entries fall back
+    to the MAC-optimal path of that gradient's network.  tokens must be a
+    multiple of ``block_tokens`` (the plan executor's padded ``ops``
+    wrappers handle ragged shapes).
+
+    This is the *kernel-level* differentiable API (standalone use of the
+    streaming kernel under ``jax.grad``).  Planned model execution goes
+    through ``repro.plan.executor._backward_planned`` instead, which
+    contracts the same ``repro.core.backward`` gradient networks but
+    routes each one per the plan's BackwardOp backend/tiling — changes
+    to the gradient-contraction contract (edge order, dtype casts,
+    padding exactness) must be mirrored there.
+    """
+    tokens = x.shape[0]
+    bwd_steps = dict(bwd_steps or {})
+    x_node = _stream_node(tn)
+    x_inner = tuple(d for e, d in zip(x_node.edges, x_node.dims)
+                    if e != x_node.edges[0])
+    core_names = [n.name for n in tn.nodes if n.kind != "input"]
+    node_edges = {n.name: n.edges for n in tn.nodes}
+    # dx streams per block -> derive from the block-batch network; weight
+    # grads reduce over the whole batch -> derive from a full-batch rebind
+    dx_net = dict(backward_networks(tn))["dx"]
+    full_bnets = [(wrt, net)
+                  for wrt, net in backward_networks(_rebatch(tn, tokens))
+                  if wrt != "dx"]
+
+    def _path_for(wrt: str, net: TensorNetwork) -> CandidatePath:
+        steps = bwd_steps.get(wrt)
+        if steps is None:
+            return find_topk_paths(net, k=1)[0]
+        steps = tuple(tuple(s) for s in steps)
+        gemms = tuple(net.gemm_sequence(steps))
+        return CandidatePath(steps, sum(g.macs for g in gemms), gemms)
+
+    @jax.custom_vjp
+    def f(x, cores):
+        return streaming_tt_linear(
+            x, list(cores), tn, path, block_tokens=block_tokens,
+            out_dtype=out_dtype, interpret=interpret)
+
+    def fwd(x, cores):
+        return f(x, cores), (x, cores)
+
+    def bwd(res, g):
+        x, cores = res
+        named = dict(zip(core_names, cores))
+        # dL/dx: dY streamed against the pinned cores — the same kernel
+        dx2d = streaming_tt_linear(
+            g.astype(x.dtype), list(cores), dx_net, _path_for("dx", dx_net),
+            block_tokens=block_tokens, interpret=interpret)
+        dcores = {}
+        for wrt, net in full_bnets:
+            grad_node = next(n for n in net.nodes if n.name == GRAD_NODE)
+            tensors = {n.name: named[n.name] for n in net.nodes
+                       if n.name in named}
+            tensors[x_node.name] = x.reshape((tokens,) + x_inner)
+            tensors[grad_node.name] = g.reshape(grad_node.dims)
+            dcores[wrt] = execute_path(
+                net, _path_for(wrt, net), tensors,
+                out_edges=node_edges[wrt], preferred_dtype=jnp.float32,
+            ).astype(named[wrt].dtype)
+        return dx2d.reshape(x.shape), tuple(dcores[n] for n in core_names)
+
+    f.defvjp(fwd, bwd)
+    return f(x, tuple(cores))
+
+
+def _rebatch(tn: TensorNetwork, tokens: int) -> TensorNetwork:
+    """Rebind the streamed node's leading batch edge to ``tokens``."""
+    x = _stream_node(tn)
+    nodes = [
+        Node(n.name, n.edges, (tokens,) + n.dims[1:], n.kind)
+        if n.name == x.name else n
+        for n in tn.nodes
+    ]
+    return TensorNetwork(nodes)

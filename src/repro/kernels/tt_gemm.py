@@ -166,3 +166,52 @@ def pltpu_accumulator(shape: tuple[int, int]):
     from jax.experimental.pallas import tpu as pltpu
 
     return pltpu.VMEM(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# differentiable wrapper: backward GEMMs run the same Pallas kernel
+# ---------------------------------------------------------------------------
+
+def tt_gemm_vjp(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    dataflow: DataflowName = "OS",
+    block_m: int = 128,
+    block_k: int = 128,
+    block_n: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``tt_gemm`` with a ``jax.custom_vjp``: differentiable end-to-end.
+
+    A ``pallas_call`` has no transpose rule, so plain autodiff cannot
+    cross :func:`tt_gemm`.  The VJP of ``C = A @ B`` is itself two GEMMs
+    — ``dA = dC @ B^T`` and ``dB = A^T @ dC`` — and both are issued
+    through the *same* dataflow-configurable Pallas kernel, with the
+    block shapes permuted to follow the transposed operands (so the
+    dimension/block divisibility contract of :func:`tt_gemm` carries
+    over to the backward shapes unchanged).
+    """
+
+    @jax.custom_vjp
+    def f(a, b):
+        return tt_gemm(a, b, dataflow=dataflow, block_m=block_m,
+                       block_k=block_k, block_n=block_n,
+                       out_dtype=out_dtype, interpret=interpret)
+
+    def fwd(a, b):
+        return f(a, b), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        # dA (m, k) = g (m, n) @ B^T (n, k): K axis is n -> block_n
+        da = tt_gemm(g, b.T, dataflow=dataflow, block_m=block_m,
+                     block_k=block_n, block_n=block_k, interpret=interpret)
+        # dB (k, n) = A^T (k, m) @ g (m, n): M axis is k -> block_k
+        db = tt_gemm(a.T, g, dataflow=dataflow, block_m=block_k,
+                     block_k=block_m, block_n=block_n, interpret=interpret)
+        return da.astype(a.dtype), db.astype(b.dtype)
+
+    f.defvjp(fwd, bwd)
+    return f(a, b)

@@ -47,10 +47,16 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--plan", default=None, metavar="PATH",
-                    help="install a DSE execution plan (repro.dse --emit-plan); "
-                         "kernel backends are forced to jnp under training — "
-                         "the plan's contraction paths still apply, but "
-                         "autodiff never crosses a pallas_call")
+                    help="install a DSE execution plan (repro.dse --emit-plan, "
+                         "ideally --mode train): projections contract along "
+                         "the planned paths through the planned Pallas "
+                         "kernels, forward AND backward — the kernels' "
+                         "custom VJPs contract the plan's gradient networks, "
+                         "so jax.grad crosses pallas_call end-to-end")
+    ap.add_argument("--plan-backend", default=None,
+                    choices=("jnp", "tt_gemm", "streaming_tt"),
+                    help="force one kernel backend for every plan layer "
+                         "(jnp = the pre-v2 reference behaviour)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tt=not args.dense, smoke=args.smoke)
@@ -58,15 +64,19 @@ def main() -> None:
     mesh = make_test_mesh()
     rules = make_rules(cfg, shape, mesh)
     if args.plan:
-        from repro.plan import check_plan_for_config, load_plan
+        from repro.plan import check_plan_for_config, load_plan, reset_execution_log
 
         plan = load_plan(args.plan)
         problems = check_plan_for_config(plan, args.arch, cfg)
         if problems:
             raise SystemExit(
                 "error: plan/model mismatch: " + "; ".join(problems))
-        m = api(cfg, plan=plan, plan_backend="jnp")
-        print(f"installed plan {args.plan} (backends forced to jnp for autodiff)")
+        reset_execution_log()
+        m = api(cfg, plan=plan, plan_backend=args.plan_backend)
+        backends = sorted({lp.backend for lp in plan.layers})
+        forced = (f", backends forced to {args.plan_backend}"
+                  if args.plan_backend else "")
+        print(f"installed plan {args.plan} (backends {backends}{forced})")
     else:
         m = api(cfg)
     pipe = make_pipeline(cfg.vocab, args.seq, args.batch)
@@ -109,6 +119,16 @@ def main() -> None:
                                  straggler=monitor)
         state, done = loop.run(state, start, args.steps - start)
         mgr.save(done, state)
+        if args.plan:
+            from repro.plan import execution_log
+
+            log = execution_log()
+            fwd = sorted({r["backend"] for r in log
+                          if r.get("phase", "fwd") == "fwd"})
+            bwd = sorted({r["backend"] for r in log
+                          if r.get("phase") == "bwd"})
+            print(f"planned execution under grad: fwd backends {fwd}, "
+                  f"bwd backends {bwd}")
         print(f"finished at step {done}; stragglers flagged: {monitor.flagged}")
 
 

@@ -50,6 +50,12 @@ def api(cfg: ModelConfig, plan=_PLAN_UNSET, *,
     passing ``plan=None`` clears it — use that when building an unplanned
     baseline after a planned model in the same process.
     """
+    if plan_backend is not None:
+        from repro.plan.schema import BACKENDS
+
+        if plan_backend not in BACKENDS:
+            raise ValueError(
+                f"unknown plan_backend {plan_backend!r}; have {BACKENDS}")
     if plan is not _PLAN_UNSET or plan_backend is not None:
         from repro.nn import install_plan
 

@@ -153,15 +153,21 @@ def install_plan(plan, *, force_backend: Optional[str] = None) -> None:
     jnp-backend layer plans whose steps resolve against the trace-time
     top-K list (the pre-plan behaviour).
 
-    ``force_backend`` overrides every entry's kernel backend — the train
-    driver forces ``"jnp"`` so autodiff never crosses a ``pallas_call``
-    (kernels are forward-only primitives).
+    ``force_backend`` overrides every entry's kernel backend (forcing
+    ``"jnp"`` also forces the backward ops — a reference-executor plan
+    stays reference end-to-end).  Pallas backends are differentiable:
+    their custom VJP contracts the plan's backward networks through the
+    planned kernels (``repro.plan.executor``), so training runs Pallas
+    under ``jax.grad``.
 
     Install *before* tracing: jit caches baked with a previous plan are
     not invalidated.
     """
-    from repro.plan.schema import ExecutionPlan, LayerPlan
+    from repro.plan.schema import BACKENDS, ExecutionPlan, LayerPlan
 
+    if force_backend is not None and force_backend not in BACKENDS:
+        raise ValueError(
+            f"unknown force_backend {force_backend!r}; have {BACKENDS}")
     _PLAN.clear()
     if plan is None:
         return
@@ -188,6 +194,15 @@ def install_plan(plan, *, force_backend: Optional[str] = None) -> None:
 def planned_layer(name: str):
     """The installed LayerPlan for a projection, or None."""
     return _PLAN.get(name)
+
+
+def _has_pallas_backward(lp) -> bool:
+    """jnp-forward layers with Pallas *backward* ops (the auto-compiler
+    emits these when only the weight-gradient GEMMs clear the kernel
+    threshold) must still route through the planned executor's VJP."""
+    from repro.plan.executor import has_pallas_backward
+
+    return has_pallas_backward(lp)
 
 
 def planned_path_index(name: str) -> int:
@@ -240,7 +255,8 @@ def linear_apply(
     else:
         lp = planned_layer(spec.name) if path_index is None else None
         n_cores = len(spec.out_modes) + len(spec.in_modes)
-        if lp is not None and lp.backend != "jnp" and _single_device():
+        if lp is not None and _single_device() and (
+                lp.backend != "jnp" or _has_pallas_backward(lp)):
             # planned kernel execution: flatten to (tokens, d_in) and route
             # through the plan's Pallas backend (see repro.plan.executor)
             from repro.plan.executor import planned_tt_linear

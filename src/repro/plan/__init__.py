@@ -9,10 +9,13 @@ through the planned kernel backend.  Format spec: ``docs/plan_format.md``.
 from .schema import (
     BACKENDS,
     PLAN_FORMAT_VERSION,
+    SUPPORTED_VERSIONS,
+    BackwardOp,
     ExecutionPlan,
     LayerPlan,
     Tiling,
     load_plan,
+    migrate_plan_json,
 )
 from .compiler import (
     base_name,
@@ -31,8 +34,8 @@ from .executor import (
 )
 
 __all__ = [
-    "BACKENDS", "PLAN_FORMAT_VERSION", "ExecutionPlan", "LayerPlan",
-    "Tiling", "load_plan",
+    "BACKENDS", "PLAN_FORMAT_VERSION", "SUPPORTED_VERSIONS", "BackwardOp",
+    "ExecutionPlan", "LayerPlan", "Tiling", "load_plan", "migrate_plan_json",
     "base_name", "batch_dim", "check_plan_for_config", "compile_plan",
     "streaming_fits", "validate_plan",
     "as_candidate_path", "execution_log", "planned_tt_linear",

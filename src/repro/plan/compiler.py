@@ -29,11 +29,13 @@ import math
 import re
 from typing import Optional, Sequence
 
+from repro.core.backward import backward_networks
 from repro.core.dse import DSEResult, LayerChoice
+from repro.core.paths import CandidatePath
 from repro.core.simulator import HardwareConfig
 from repro.core.tensor_network import Node, TensorNetwork
 
-from .schema import BACKENDS, ExecutionPlan, LayerPlan, Tiling
+from .schema import BACKENDS, BackwardOp, ExecutionPlan, LayerPlan, Tiling
 
 #: conservative VMEM budget for the streaming backend (half a v5e core's
 #: 16 MiB VMEM, leaving headroom for double-buffering the token blocks)
@@ -114,15 +116,19 @@ def streaming_fits(
     return _peak_live_elements(block, steps) * bytes_per_elem <= budget_bytes
 
 
-def _choose_tiling(choice: LayerChoice, tokens: int) -> Tiling:
+def _tiling_for_path(path: CandidatePath, tokens: int) -> Tiling:
     """Blocks from the path's dominant (highest-MAC) GEMM."""
-    g = max(choice.path.gemms, key=lambda g: g.macs)
+    g = max(path.gemms, key=lambda g: g.macs)
     return Tiling(
         block_m=max(8, _pow2_le(min(128, g.M))),
         block_k=max(8, _pow2_le(min(128, g.K))),
         block_n=max(8, _pow2_le(min(128, g.N))),
         block_tokens=max(8, _pow2_le(min(256, tokens))),
     )
+
+
+def _choose_tiling(choice: LayerChoice, tokens: int) -> Tiling:
+    return _tiling_for_path(choice.path, tokens)
 
 
 def _choose_backend(
@@ -133,6 +139,49 @@ def _choose_backend(
     if streaming_fits(tn, choice.path.steps, tiling.block_tokens):
         return "streaming_tt"
     return "tt_gemm"
+
+
+def _choose_bwd_backend(
+    wrt: str, net: TensorNetwork, path: CandidatePath, tiling: Tiling
+) -> str:
+    """Backend heuristic for one backward contraction.
+
+    Mirrors the forward heuristic; only the single-streamed-operand dx
+    gradient qualifies for the streaming kernel (weight gradients stream
+    both X and dY).
+    """
+    if max(g.macs for g in path.gemms) < MIN_KERNEL_MACS:
+        return "jnp"
+    if wrt == "dx" and streaming_fits(net, path.steps, tiling.block_tokens):
+        return "streaming_tt"
+    return "tt_gemm"
+
+
+def _compile_backward(
+    tn: TensorNetwork, choice: LayerChoice, tokens: int, backend: str
+) -> tuple[BackwardOp, ...]:
+    """BackwardOps from a train-DSE choice (empty for inference results)."""
+    if not choice.backward:
+        return ()
+    nets = dict(backward_networks(tn))
+    ops = []
+    for ch in choice.backward:
+        net = nets[ch.wrt]
+        tiling = _tiling_for_path(ch.path, tokens or batch_dim(tn))
+        if backend == "auto":
+            be = _choose_bwd_backend(ch.wrt, net, ch.path, tiling)
+        elif backend == "streaming_tt" and ch.wrt != "dx":
+            be = "tt_gemm"  # weight grads cannot stream; closest kernel
+        else:
+            be = backend
+        ops.append(BackwardOp(
+            wrt=ch.wrt,
+            path_index=ch.path_index,
+            path_steps=tuple(tuple(s) for s in ch.path.steps),
+            backend=be,
+            tiling=tiling,
+        ))
+    return tuple(ops)
 
 
 def _steps_in_range(n_nodes: int, steps) -> bool:
@@ -187,6 +236,27 @@ def validate_plan(
                 f"{lp.name}: plan step indices {list(map(list, lp.path_steps))} "
                 "do not describe a valid pairwise contraction of "
                 f"{len(tn.nodes)} nodes (corrupted or hand-edited plan?)")
+        if lp.backward:
+            want = {"dx"} | {n.name for n in tn.nodes if n.kind != "input"}
+            got = {op.wrt for op in lp.backward}
+            if got != want:
+                problems.append(
+                    f"{lp.name}: backward entries cover {sorted(got)} but "
+                    f"the layer's gradients are {sorted(want)} "
+                    "(hand-edited or geometry-mismatched plan?)")
+        # every backward network of a TT layer has the same node count as
+        # the forward (one node swapped for / replaced by dY), so the same
+        # step-count check applies
+        for op in lp.backward:
+            if len(op.path_steps) != len(tn.nodes) - 1:
+                problems.append(
+                    f"{lp.name}: backward[{op.wrt}] has {len(op.path_steps)} "
+                    f"steps but the gradient network needs "
+                    f"{len(tn.nodes) - 1}")
+            elif not _steps_in_range(len(tn.nodes), op.path_steps):
+                problems.append(
+                    f"{lp.name}: backward[{op.wrt}] step indices are not a "
+                    f"valid pairwise contraction of {len(tn.nodes)} nodes")
     if matched == 0:
         problems.append(
             "plan matches no tensorized projection of this model "
@@ -247,9 +317,12 @@ def compile_plan(
         counts[name] = counts.get(name, 0) + 1
         if name in by_family:
             prev = by_family[name]
+            bwd_steps = tuple(ch.path.steps for ch in choice.backward)
+            prev_bwd_steps = tuple(op.path_steps for op in prev.backward)
             if (prev.path_steps != choice.path.steps
                     or prev.dataflow != choice.dataflow.value
-                    or prev.partitioning != tuple(choice.partitioning)):
+                    or prev.partitioning != tuple(choice.partitioning)
+                    or prev_bwd_steps != bwd_steps):
                 raise ValueError(
                     f"instances of {name!r} received divergent DSE choices; "
                     "cannot collapse to one scanned layer plan")
@@ -264,8 +337,10 @@ def compile_plan(
             partitioning=tuple(choice.partitioning),
             backend=be,
             tiling=tiling,
+            backward=_compile_backward(tn, choice, tokens, backend),
             macs=choice.path.macs,
             latency_s=choice.latency_s,
+            bwd_latency_s=choice.bwd_latency_s,
         )
 
     layers = tuple(

@@ -17,26 +17,40 @@ projection.  Three backends:
                    tensor contraction *is* a GEMM (free-edges x
                    shared-edges reshape), which is the paper's §3.1 view.
 
+**Training.**  A ``pallas_call`` has no autodiff rule, so the Pallas
+backends are wrapped in a ``jax.custom_vjp`` whose backward pass
+contracts the layer's *gradient networks* (``repro.core.backward``) —
+dL/dx and one dL/dG_k per core — along the plan's searched backward
+paths (schema v2 ``backward`` entries; inference-only plans fall back to
+the MAC-optimal backward path per gradient).  Each backward contraction
+is itself routed through a planned kernel: dx may stream through the
+same Pallas pipeline as the forward, weight gradients lower to the
+Pallas GEMM.  ``launch/train.py --plan`` therefore runs Pallas
+end-to-end under ``jax.grad``.
+
 Every planned call appends a record to a trace-time execution log —
-``execution_log()`` — so callers (tests, the serve driver) can assert
-*which* path/dataflow/kernel actually executed.  Under ``jit`` the record
-is appended once per trace, not per step.
+``execution_log()`` — so callers (tests, the serve/train drivers) can
+assert *which* path/dataflow/kernel actually executed, in which autodiff
+``phase`` (``"fwd"`` at forward trace, ``"bwd"`` inside the VJP).  Under
+``jit`` the record is appended once per trace, not per step.
 """
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.backward import backward_networks, grad_input_network
 from repro.core.contraction import core_tensors, execute_path
-from repro.core.paths import CandidatePath
+from repro.core.paths import CandidatePath, find_topk_paths
 from repro.core.tensor_network import TensorNetwork, tt_linear_network
 from repro.kernels import ops, ref
 
-from .schema import LayerPlan
+from .schema import BackwardOp, LayerPlan
 
 # ---------------------------------------------------------------------------
 # trace-time execution log
@@ -54,38 +68,43 @@ def execution_log() -> tuple[dict, ...]:
     return tuple(_EXEC_LOG)
 
 
-def record_execution(lp: LayerPlan, tokens: int) -> None:
+def record_execution(
+    lp: LayerPlan,
+    tokens: int,
+    *,
+    phase: str = "fwd",
+    backend: Optional[str] = None,
+    wrt: Optional[str] = None,
+    path_steps=None,
+) -> None:
     """Append one planned-execution record (called at trace time)."""
-    _EXEC_LOG.append({
+    rec = {
         "name": lp.name,
-        "backend": lp.backend,
+        "backend": backend if backend is not None else lp.backend,
         "dataflow": lp.dataflow,
         "path_index": lp.path_index,
-        "path_steps": lp.path_steps,
+        "path_steps": lp.path_steps if path_steps is None else path_steps,
         "tokens": tokens,
-    })
+        "phase": phase,
+    }
+    if wrt is not None:
+        rec["wrt"] = wrt
+    _EXEC_LOG.append(rec)
 
 
 # ---------------------------------------------------------------------------
 # path plumbing
 # ---------------------------------------------------------------------------
 
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+def has_pallas_backward(lp: LayerPlan) -> bool:
+    """Whether any of the plan's backward ops names a Pallas backend.
 
-
-def _clamp_block(block: int, dim: int) -> int:
-    """Shrink a compile-time block to the runtime dim (power of two, >= 8).
-
-    The DSE tiles for its search-time token count; at execution time a
-    decode step may carry only a handful of tokens, and padding it up to
-    the full plan block would compute mostly zeros.  Clamping to the next
-    power of two >= dim keeps a single (minimally padded) block.
+    The auto-compiler can pair a jnp *forward* (small forward GEMMs)
+    with Pallas *backward* ops (the weight-gradient GEMMs reduce over
+    the whole batch, so they clear ``MIN_KERNEL_MACS`` when the forward
+    does not) — such layers still need the custom-VJP route.
     """
-    return max(8, min(block, _next_pow2(dim)))
+    return any(op.backend != "jnp" for op in lp.backward)
 
 
 def as_candidate_path(tn: TensorNetwork, steps) -> CandidatePath:
@@ -95,35 +114,158 @@ def as_candidate_path(tn: TensorNetwork, steps) -> CandidatePath:
     return CandidatePath(steps, sum(g.macs for g in gemms), gemms)
 
 
-def _gemm_contract(lp: LayerPlan, interpret: Optional[bool]):
-    """A per-step ``contract_fn`` for ``execute_path`` that lowers each
-    pairwise contraction to the dataflow-configurable Pallas GEMM.
+def _gemm_contract(lp: LayerPlan, tiling, interpret: Optional[bool]):
+    """Pallas-GEMM ``contract_fn`` with the plan's dataflow and blocks."""
+    return ops.gemm_contract(
+        dataflow=lp.dataflow,
+        block_m=tiling.block_m,
+        block_k=tiling.block_k,
+        block_n=tiling.block_n,
+        interpret=interpret,
+    )
 
-    Operands are transposed to (free..., shared...) / (shared..., free...)
-    and flattened to (M, K) @ (K, N); the result keeps tensordot's axis
-    order (A's free axes then B's), so all the edge bookkeeping stays in
-    ``core.contraction.execute_path``.
+
+@functools.lru_cache(maxsize=4096)
+def _default_bwd_steps(
+    batch: int,
+    in_modes: tuple[int, ...],
+    out_modes: tuple[int, ...],
+    ranks: tuple[int, ...],
+) -> tuple[tuple[str, tuple[tuple[int, int], ...]], ...]:
+    """MAC-optimal backward path per gradient (fallback for v1 plans)."""
+    tn = tt_linear_network(batch, in_modes, out_modes, ranks)
+    return tuple(
+        (wrt, find_topk_paths(net, k=1)[0].steps)
+        for wrt, net in backward_networks(tn)
+    )
+
+
+def _resolve_backward_ops(
+    lp: LayerPlan,
+    tokens: int,
+    in_modes: tuple[int, ...],
+    out_modes: tuple[int, ...],
+    ranks: tuple[int, ...],
+) -> tuple[BackwardOp, ...]:
+    """The plan's backward ops, or derived defaults for inference plans.
+
+    Defaults: MAC-optimal path per gradient; dx inherits the forward
+    backend (it is the same kind of streaming contraction), weight
+    gradients lower to the Pallas GEMM (two streamed operands cannot use
+    the streaming kernel), everything stays jnp under a jnp forward.
+    A partial ``backward`` list (hand-edited plan installed without the
+    driver-side ``check_plan_for_config`` guard) keeps its entries and
+    fills the missing gradients with the same defaults.
     """
+    planned = {op.wrt: op for op in lp.backward}
+    if lp.backend == "jnp":
+        dx_backend = grad_backend = "jnp"
+    else:
+        dx_backend = lp.backend
+        grad_backend = "tt_gemm"
+    return tuple(
+        planned.get(wrt) or BackwardOp(
+            wrt=wrt,
+            path_index=0,
+            path_steps=steps,
+            backend=dx_backend if wrt == "dx" else grad_backend,
+            tiling=lp.tiling,
+        )
+        for wrt, steps in _default_bwd_steps(tokens, in_modes, out_modes, ranks)
+    )
 
-    def contract(ta: jax.Array, tb: jax.Array, axes) -> jax.Array:
-        ax_a, ax_b = axes
-        a_free = [i for i in range(ta.ndim) if i not in ax_a]
-        b_free = [i for i in range(tb.ndim) if i not in ax_b]
-        a_dims = [ta.shape[i] for i in a_free]
-        b_dims = [tb.shape[i] for i in b_free]
-        m = math.prod(a_dims) if a_dims else 1
-        n = math.prod(b_dims) if b_dims else 1
-        k = math.prod(ta.shape[i] for i in ax_a) if ax_a else 1
-        a2 = jnp.transpose(ta, a_free + list(ax_a)).reshape(m, k)
-        b2 = jnp.transpose(tb, list(ax_b) + b_free).reshape(k, n)
-        c2 = ops.gemm(a2, b2, dataflow=lp.dataflow,
-                      block_m=_clamp_block(lp.tiling.block_m, m),
-                      block_k=_clamp_block(lp.tiling.block_k, k),
-                      block_n=_clamp_block(lp.tiling.block_n, n),
-                      interpret=interpret)
-        return c2.reshape(tuple(a_dims) + tuple(b_dims))
 
-    return contract
+# ---------------------------------------------------------------------------
+# forward bodies (shared by the inference path and the custom-VJP wrapper)
+# ---------------------------------------------------------------------------
+
+def _forward_planned(
+    lp: LayerPlan,
+    x2d: jax.Array,
+    cores: Sequence[jax.Array],
+    in_modes: tuple[int, ...],
+    out_modes: tuple[int, ...],
+    ranks: tuple[int, ...],
+    interpret: Optional[bool],
+) -> jax.Array:
+    """The plan's forward contraction: ``(tokens, d_in) -> (tokens, d_out)``."""
+    tokens = x2d.shape[0]
+    if lp.backend == "streaming_tt":
+        bt = ops.clamp_block(lp.tiling.block_tokens, tokens)
+        tn_block = tt_linear_network(bt, in_modes, out_modes, ranks)
+        path = as_candidate_path(tn_block, lp.path_steps)
+        return ops.tt_linear(x2d, list(cores), tn_block, path,
+                             block_tokens=bt, interpret=interpret)
+
+    tn = tt_linear_network(tokens, in_modes, out_modes, ranks)
+    if lp.backend == "tt_gemm":
+        tensors = {"X": x2d.reshape((tokens,) + tuple(in_modes))}
+        tensors.update(core_tensors(tn, list(cores)))
+        out_edges = ("b",) + tuple(f"i{t + 1}" for t in range(len(out_modes)))
+        y = execute_path(tn, lp.path_steps, tensors, out_edges=out_edges,
+                         contract_fn=_gemm_contract(lp, lp.tiling, interpret))
+        return y.reshape(tokens, -1)
+
+    # "jnp": the reference executor along the planned steps
+    path = as_candidate_path(tn, lp.path_steps)
+    return ref.tt_linear_ref(x2d, list(cores), tn, path)
+
+
+def _backward_planned(
+    lp: LayerPlan,
+    x2d: jax.Array,
+    cores: Sequence[jax.Array],
+    dy2d: jax.Array,
+    in_modes: tuple[int, ...],
+    out_modes: tuple[int, ...],
+    ranks: tuple[int, ...],
+    interpret: Optional[bool],
+):
+    """Contract the layer's gradient networks along the planned backward
+    paths, each through its planned backend.  Returns ``(dx2d, dcores)``.
+    """
+    tokens = x2d.shape[0]
+    tn = tt_linear_network(tokens, in_modes, out_modes, ranks)
+    core_names = [n.name for n in tn.nodes if n.name != "X"]
+    named = dict(zip(core_names, cores))
+    node_edges = {n.name: n.edges for n in tn.nodes}
+    bwd_ops = {op.wrt: op
+               for op in _resolve_backward_ops(lp, tokens, in_modes,
+                                               out_modes, ranks)}
+    dy = dy2d.astype(x2d.dtype)
+
+    dx2d = None
+    dcores: dict[str, jax.Array] = {}
+    for wrt, net in backward_networks(tn):
+        op = bwd_ops[wrt]
+        record_execution(lp, tokens, phase="bwd", backend=op.backend,
+                         wrt=wrt, path_steps=op.path_steps)
+        if wrt == "dx" and op.backend == "streaming_tt":
+            bt = ops.clamp_block(op.tiling.block_tokens, tokens)
+            net_block = grad_input_network(
+                tt_linear_network(bt, in_modes, out_modes, ranks))
+            path = as_candidate_path(net_block, op.path_steps)
+            dx2d = ops.tt_linear(dy, list(cores), net_block, path,
+                                 block_tokens=bt, interpret=interpret)
+            continue
+        tensors = {n.name: named[n.name] for n in net.nodes
+                   if n.name in named}
+        if wrt != "dx":
+            tensors["X"] = x2d.reshape((tokens,) + tuple(in_modes))
+        tensors["dY"] = dy.reshape((tokens,) + tuple(out_modes))
+        contract_fn = (_gemm_contract(lp, op.tiling, interpret)
+                       if op.backend == "tt_gemm" else None)
+        out_edges = node_edges["X"] if wrt == "dx" else node_edges[wrt]
+        g = execute_path(net, op.path_steps, tensors, out_edges=out_edges,
+                         preferred_dtype=jnp.float32,
+                         contract_fn=contract_fn)
+        if wrt == "dx":
+            dx2d = g.reshape(tokens, -1)
+        else:
+            dcores[wrt] = g.astype(named[wrt].dtype)
+    assert dx2d is not None
+    return dx2d.astype(x2d.dtype), tuple(
+        dcores[name] for name in core_names)
 
 
 # ---------------------------------------------------------------------------
@@ -143,27 +285,34 @@ def planned_tt_linear(
     """Apply one planned TT projection to ``x2d: (tokens, d_in)``.
 
     Returns ``(tokens, d_out)``.  The plan's ``path_steps`` are replayed
-    verbatim; the backend decides *how* each step runs.
+    verbatim; the backend decides *how* each step runs.  Pallas backends
+    are differentiable: the custom VJP contracts the plan's backward
+    networks (see module docstring).
     """
+    in_modes = tuple(in_modes)
+    out_modes = tuple(out_modes)
+    ranks = tuple(ranks)
     tokens = x2d.shape[0]
     record_execution(lp, tokens)
 
-    if lp.backend == "streaming_tt":
-        bt = _clamp_block(lp.tiling.block_tokens, tokens)
-        tn_block = tt_linear_network(bt, in_modes, out_modes, ranks)
-        path = as_candidate_path(tn_block, lp.path_steps)
-        return ops.tt_linear(x2d, cores, tn_block, path,
-                             block_tokens=bt, interpret=interpret)
+    if lp.backend == "jnp" and not has_pallas_backward(lp):
+        # pure-reference layer (jnp forward, no Pallas backward ops):
+        # plain jnp is natively differentiable, keep native autodiff
+        return _forward_planned(lp, x2d, cores, in_modes, out_modes, ranks,
+                                interpret)
 
-    tn = tt_linear_network(tokens, in_modes, out_modes, ranks)
-    if lp.backend == "tt_gemm":
-        tensors = {"X": x2d.reshape((tokens,) + tuple(in_modes))}
-        tensors.update(core_tensors(tn, cores))
-        out_edges = ("b",) + tuple(f"i{t + 1}" for t in range(len(out_modes)))
-        y = execute_path(tn, lp.path_steps, tensors, out_edges=out_edges,
-                         contract_fn=_gemm_contract(lp, interpret))
-        return y.reshape(tokens, -1)
+    @jax.custom_vjp
+    def f(x2d, cores):
+        return _forward_planned(lp, x2d, cores, in_modes, out_modes, ranks,
+                                interpret)
 
-    # "jnp": the reference executor along the planned steps
-    path = as_candidate_path(tn, lp.path_steps)
-    return ref.tt_linear_ref(x2d, cores, tn, path)
+    def fwd(x2d, cores):
+        return f(x2d, cores), (x2d, cores)
+
+    def bwd(res, dy2d):
+        x2d, cores = res
+        return _backward_planned(lp, x2d, cores, dy2d, in_modes, out_modes,
+                                 ranks, interpret)
+
+    f.defvjp(fwd, bwd)
+    return f(x2d, tuple(cores))

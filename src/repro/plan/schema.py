@@ -26,8 +26,13 @@ import dataclasses
 import json
 from typing import Mapping, Optional, Sequence
 
-#: bump when the wire format changes incompatibly
-PLAN_FORMAT_VERSION = 1
+#: current wire-format version.  v2 added per-layer *backward* entries
+#: (training-aware plans); v1 files are migrated on load — see
+#: :func:`migrate_plan_json`.
+PLAN_FORMAT_VERSION = 2
+
+#: versions :func:`ExecutionPlan.from_json` accepts (older ones migrate up)
+SUPPORTED_VERSIONS = (1, 2)
 
 #: executor backends a layer plan may name
 BACKENDS = ("jnp", "tt_gemm", "streaming_tt")
@@ -64,6 +69,58 @@ class Tiling:
 
 
 @dataclasses.dataclass(frozen=True)
+class BackwardOp:
+    """One backward-pass contraction of a layer (schema v2).
+
+    ``wrt`` names the gradient: ``"dx"`` for the activation gradient or a
+    forward-network core node (``"G1"``...) for a weight gradient.  The
+    ``path_steps`` replay the DSE-searched backward contraction order of
+    that gradient's tensor network (``repro.core.backward``); ``backend``
+    and ``tiling`` route it through a kernel, exactly like the forward.
+    The backward pass shares the layer's dataflow (one hardware
+    configuration per layer per step — the training cost model's
+    assumption).
+    """
+
+    wrt: str
+    path_index: int
+    path_steps: tuple[tuple[int, int], ...]
+    backend: str
+    tiling: Tiling = Tiling()
+
+    def __post_init__(self) -> None:
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backward[{self.wrt}]: unknown backend "
+                             f"{self.backend!r}")
+        if self.backend == "streaming_tt" and self.wrt != "dx":
+            raise ValueError(
+                f"backward[{self.wrt}]: streaming_tt streams a single "
+                "operand — only the dx gradient qualifies")
+        for s in self.path_steps:
+            if len(s) != 2:
+                raise ValueError(f"backward[{self.wrt}]: malformed step {s!r}")
+
+    def to_json(self) -> dict:
+        return {
+            "wrt": self.wrt,
+            "path_index": self.path_index,
+            "path_steps": [list(s) for s in self.path_steps],
+            "backend": self.backend,
+            "tiling": self.tiling.to_json(),
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "BackwardOp":
+        return cls(
+            wrt=str(d["wrt"]),
+            path_index=int(d["path_index"]),
+            path_steps=tuple((int(i), int(j)) for i, j in d["path_steps"]),
+            backend=str(d["backend"]),
+            tiling=Tiling.from_json(d["tiling"]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class LayerPlan:
     """Deployment decision for one projection family.
 
@@ -81,9 +138,13 @@ class LayerPlan:
     partitioning: tuple[int, int]      # (1,1) | (1,2) | (2,1)
     backend: str                       # "jnp" | "tt_gemm" | "streaming_tt"
     tiling: Tiling = Tiling()
+    #: v2: searched backward contractions (empty = inference-only plan;
+    #: the executor then derives default backward paths at trace time)
+    backward: tuple = ()               # tuple[BackwardOp, ...]
     # provenance (not used by the executor)
     macs: int = 0
     latency_s: float = 0.0
+    bwd_latency_s: float = 0.0
     instances: int = 1
 
     def __post_init__(self) -> None:
@@ -96,9 +157,29 @@ class LayerPlan:
         for s in self.path_steps:
             if len(s) != 2:
                 raise ValueError(f"{self.name}: malformed path step {s!r}")
+        for op in self.backward:
+            if not isinstance(op, BackwardOp):
+                raise ValueError(
+                    f"{self.name}: backward entries must be BackwardOp, "
+                    f"got {type(op).__name__}")
+        wrts = [op.wrt for op in self.backward]
+        if len(set(wrts)) != len(wrts):
+            raise ValueError(f"{self.name}: duplicate backward wrt entries")
 
     def with_backend(self, backend: str) -> "LayerPlan":
-        return dataclasses.replace(self, backend=backend)
+        """Force every contraction of the layer — forward AND backward —
+        onto ``backend``.  The one carve-out: ``streaming_tt`` streams a
+        single operand, so weight-gradient ops get ``tt_gemm`` (the
+        closest kernel) instead.
+        """
+        def bwd_backend(op: "BackwardOp") -> str:
+            if backend == "streaming_tt" and op.wrt != "dx":
+                return "tt_gemm"
+            return backend
+
+        bwd = tuple(dataclasses.replace(op, backend=bwd_backend(op))
+                    for op in self.backward)
+        return dataclasses.replace(self, backend=backend, backward=bwd)
 
     def to_json(self) -> dict:
         return {
@@ -109,8 +190,10 @@ class LayerPlan:
             "partitioning": list(self.partitioning),
             "backend": self.backend,
             "tiling": self.tiling.to_json(),
+            "backward": [op.to_json() for op in self.backward],
             "macs": self.macs,
             "latency_s": self.latency_s,
+            "bwd_latency_s": self.bwd_latency_s,
             "instances": self.instances,
         }
 
@@ -124,8 +207,11 @@ class LayerPlan:
             partitioning=(int(d["partitioning"][0]), int(d["partitioning"][1])),
             backend=str(d["backend"]),
             tiling=Tiling.from_json(d["tiling"]),
+            backward=tuple(BackwardOp.from_json(b)
+                           for b in d.get("backward", [])),
             macs=int(d.get("macs", 0)),
             latency_s=float(d.get("latency_s", 0.0)),
+            bwd_latency_s=float(d.get("bwd_latency_s", 0.0)),
             instances=int(d.get("instances", 1)),
         )
 
@@ -186,10 +272,11 @@ class ExecutionPlan:
         if fmt != "repro.execution_plan":
             raise ValueError(f"not an execution plan (format={fmt!r})")
         version = int(d.get("version", -1))
-        if version != PLAN_FORMAT_VERSION:
+        if version not in SUPPORTED_VERSIONS:
             raise ValueError(
                 f"plan format version {version} unsupported "
-                f"(this build reads version {PLAN_FORMAT_VERSION})")
+                f"(this build reads versions {SUPPORTED_VERSIONS})")
+        d = migrate_plan_json(d)
         return cls(
             layers=tuple(LayerPlan.from_json(l) for l in d["layers"]),
             arch=str(d.get("arch", "")),
@@ -198,7 +285,7 @@ class ExecutionPlan:
             strategy=str(d.get("strategy", "")),
             tokens=int(d.get("tokens", 0)),
             total_latency_s=float(d.get("total_latency_s", 0.0)),
-            version=version,
+            version=PLAN_FORMAT_VERSION,
         )
 
     def dumps(self) -> str:
@@ -212,6 +299,30 @@ class ExecutionPlan:
     def save(self, path: str) -> None:
         with open(path, "w") as f:
             f.write(self.dumps())
+
+
+def migrate_plan_json(d: Mapping) -> dict:
+    """Upgrade a plan JSON dict to the current version (idempotent).
+
+    v1 -> v2: layers gain an empty ``backward`` list (and zero
+    ``bwd_latency_s`` provenance) — a v1 plan is an inference-only v2
+    plan.  The migration is deterministic, so
+    ``loads(v1).dumps()`` -> ``loads(...)`` -> ``dumps()`` is bit-stable
+    (the round-trip property ``tests/test_plan.py`` asserts).
+    """
+    version = int(d.get("version", -1))
+    if version == PLAN_FORMAT_VERSION:
+        return dict(d)
+    if version == 1:
+        out = dict(d)
+        out["version"] = 2
+        out["layers"] = [
+            {**layer, "backward": layer.get("backward", []),
+             "bwd_latency_s": layer.get("bwd_latency_s", 0.0)}
+            for layer in d["layers"]
+        ]
+        return out
+    raise ValueError(f"cannot migrate plan version {version}")
 
 
 def load_plan(path: str) -> ExecutionPlan:

@@ -1,0 +1,482 @@
+"""Training-aware DSE: backward networks, train cost tables, joint search,
+and differentiable planned execution.
+
+Covers the acceptance criteria of the training-DSE PR:
+
+1. backward-network construction is edge/shape-consistent with the
+   autodiff of the jnp reference (``jax.make_jaxpr`` output avals) and
+   numerically exact against ``jax.grad``;
+2. the ``custom_vjp`` wrappers of both Pallas kernels gradcheck against
+   the jnp path (fp32: rtol/atol 1e-4 — accumulation-order differences
+   only, the contractions are mathematically identical);
+3. ``global_search(objective="train-latency")`` returns a path/dataflow
+   choice that differs from the inference-optimal one on a bundled arch;
+4. planned Pallas execution composes with ``jax.grad`` end-to-end
+   (execution log shows Pallas backends in the ``bwd`` phase, gradients
+   match the unplanned jnp reference).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FPGA_VU9P,
+    TrainCostWeights,
+    backward_networks,
+    build_train_cost_tables,
+    find_topk_paths,
+    global_search,
+    layer_backward,
+    memoised_layer_backwards,
+    tt_linear_network,
+)
+from repro.core.contraction import execute_path
+from repro.core.tensor_network import dense_linear_network
+
+#: documented tolerance for Pallas-vs-jnp gradient comparisons: fp32
+#: kernels accumulate in a different association order than tensordot
+GRAD_RTOL = 1e-4
+GRAD_ATOL = 1e-4
+
+
+def _tiny_tt(batch=8):
+    return tt_linear_network(batch, (4, 4), (4, 4), (3, 3, 3))
+
+
+def _tensors(tn, rng):
+    return {n.name: jnp.asarray(rng.standard_normal(n.dims), jnp.float32)
+            for n in tn.nodes}
+
+
+# ---------------------------------------------------------------------------
+# 1. backward-network construction
+# ---------------------------------------------------------------------------
+
+def test_backward_networks_cover_all_gradients():
+    tn = _tiny_tt()
+    nets = backward_networks(tn)
+    wrts = [wrt for wrt, _ in nets]
+    assert wrts == ["dx", "G1", "G2", "G3", "G4"]
+    # every backward network has the same node count as the forward
+    for _, net in nets:
+        assert len(net.nodes) == len(tn.nodes)
+
+
+def test_backward_network_shapes_match_jaxpr_avals():
+    """Each gradient network's output dims == the aval of the matching
+    gradient in ``jax.make_jaxpr(jax.grad(reference))``."""
+    tn = _tiny_tt()
+    rng = np.random.default_rng(0)
+    tensors = _tensors(tn, rng)
+    path = find_topk_paths(tn, k=1)[0]
+
+    def loss(tensors):
+        y = execute_path(tn, path, tensors, out_edges=("b", "i1", "i2"))
+        return jnp.sum(y * y)
+
+    jaxpr = jax.make_jaxpr(jax.grad(loss))(tensors)
+    grad_avals = {
+        name: aval
+        for name, aval in zip(sorted(tensors), jaxpr.out_avals)
+    }
+    target = {"dx": "X", "G1": "G1", "G2": "G2", "G3": "G3", "G4": "G4"}
+    for wrt, net in backward_networks(tn):
+        node = next(n for n in tn.nodes if n.name == target[wrt])
+        got = net.output_dims()
+        # free edges of the gradient network == the target node's edges
+        assert set(got) == set(node.edges)
+        assert tuple(got[e] for e in node.edges) == node.dims
+        assert tuple(grad_avals[target[wrt]].shape) == node.dims
+
+
+@pytest.mark.parametrize("make_net,target_edges", [
+    (lambda: _tiny_tt(), ("b", "i1", "i2")),
+    (lambda: dense_linear_network(8, 16, 32), ("b", "i")),
+])
+def test_backward_networks_match_jax_grad(make_net, target_edges):
+    tn = make_net()
+    rng = np.random.default_rng(1)
+    tensors = _tensors(tn, rng)
+    path = find_topk_paths(tn, k=1)[0]
+
+    def fwd(tensors):
+        return execute_path(tn, path, tensors, out_edges=target_edges)
+
+    dy = jnp.asarray(rng.standard_normal(fwd(tensors).shape), jnp.float32)
+    ref = jax.grad(lambda t: jnp.vdot(fwd(t), dy))(tensors)
+    for wrt, net in backward_networks(tn):
+        target = "X" if wrt == "dx" else wrt
+        bw_tensors = {n.name: (dy if n.name == "dY" else tensors[n.name])
+                      for n in net.nodes}
+        out_edges = next(n.edges for n in tn.nodes if n.name == target)
+        for q in find_topk_paths(net, k=3):
+            got = execute_path(net, q, bw_tensors, out_edges=out_edges)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(ref[target]),
+                rtol=1e-5, atol=1e-5, err_msg=f"{wrt} path {q.steps}")
+
+
+def test_backward_rejects_multi_input_networks():
+    from repro.core.backward import grad_core_network
+
+    tn = _tiny_tt()
+    dG = grad_core_network(tn, "G2")  # has two input-kind nodes (X, dY)
+    with pytest.raises(ValueError):
+        backward_networks(dG)
+
+
+# ---------------------------------------------------------------------------
+# 2. train cost tables
+# ---------------------------------------------------------------------------
+
+def test_train_table_decomposition_and_weights():
+    tn = _tiny_tt(64)
+    paths = [find_topk_paths(tn, k=3)]
+    lbs = [layer_backward(tn, k=3)]
+    w = TrainCostWeights(fwd=1.0, bwd=2.0, update=0.5)
+    tt = build_train_cost_tables(paths, lbs, FPGA_VU9P, weights=w)
+    train = tt.train_seconds()
+    assert set(train) == set(tt.fwd.seconds)
+    for (l, p, c, d), v in train.items():
+        expect = (tt.fwd.seconds[(l, p, c, d)]
+                  + 2.0 * tt.bwd_seconds[(l, c, d)]
+                  + 0.5 * tt.update_seconds[l])
+        assert v == pytest.approx(expect, rel=1e-12)
+    # the backward term is the sum of the per-problem argmin latencies
+    for (l, c, d), choices in tt.bwd_choices.items():
+        assert [ch.wrt for ch in choices] == ["dx", "G1", "G2", "G3", "G4"]
+        assert tt.bwd_seconds[(l, c, d)] == pytest.approx(
+            sum(ch.latency_s for ch in choices), rel=1e-12)
+    assert tt.update_seconds[0] > 0.0
+
+
+def test_train_search_attaches_backward_choices():
+    tn = _tiny_tt(64)
+    paths = [find_topk_paths(tn, k=3)]
+    lbs = memoised_layer_backwards([tn], k=3)
+    res = global_search(paths, FPGA_VU9P, objective="train-latency",
+                        layer_backwards=lbs)
+    assert res.objective == "train-latency"
+    ch = res.choices[0]
+    assert [b.wrt for b in ch.backward] == ["dx", "G1", "G2", "G3", "G4"]
+    assert ch.latency_s == pytest.approx(
+        ch.fwd_latency_s + ch.bwd_latency_s + ch.update_latency_s, rel=1e-12)
+    assert res.total_latency_s == pytest.approx(
+        sum(c.latency_s for c in res.choices), rel=1e-12)
+
+
+def test_train_objective_requires_backwards():
+    tn = _tiny_tt()
+    paths = [find_topk_paths(tn, k=2)]
+    with pytest.raises(ValueError, match="layer_backwards"):
+        global_search(paths, FPGA_VU9P, objective="train-latency")
+    with pytest.raises(ValueError, match="objective"):
+        global_search(paths, FPGA_VU9P, objective="nope")
+
+
+# ---------------------------------------------------------------------------
+# 3. train-latency optimum differs from the inference optimum
+# ---------------------------------------------------------------------------
+
+def test_train_choice_differs_from_inference_on_bundled_arch():
+    """Acceptance: on ``vit_ti4/cifar10`` (FPGA target), the joint
+    fwd+bwd search picks a different path and a different dataflow than
+    the inference search for at least one layer."""
+    from repro.dse_cli import _vision_dse_layers
+
+    named = _vision_dse_layers("vit_ti4/cifar10", 1)
+    nets = [tn for _, tn in named]
+    memo: dict = {}
+    layer_paths = []
+    for tn in nets:
+        key = tuple((n.edges, n.dims, n.kind) for n in tn.nodes)
+        if key not in memo:
+            memo[key] = find_topk_paths(tn, k=4)
+        layer_paths.append(memo[key])
+    lbs = memoised_layer_backwards(nets, k=4)
+    inf = global_search(layer_paths, FPGA_VU9P)
+    tr = global_search(layer_paths, FPGA_VU9P, objective="train-latency",
+                       layer_backwards=lbs)
+    path_diff = sum(1 for a, b in zip(inf.choices, tr.choices)
+                    if a.path_index != b.path_index)
+    df_diff = sum(1 for a, b in zip(inf.choices, tr.choices)
+                  if a.dataflow != b.dataflow)
+    assert path_diff > 0, "train search never changed a contraction path"
+    assert df_diff > 0, "train search never changed a dataflow"
+
+
+# ---------------------------------------------------------------------------
+# 4. differentiable kernels (gradcheck vs jnp, tolerance documented above)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dataflow", ["OS", "WS", "IS"])
+def test_tt_gemm_vjp_gradcheck(dataflow):
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((24, 20)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 20)), jnp.float32)
+
+    def f(a, b):
+        y = ops.gemm(a, b, dataflow=dataflow, block_m=8, block_k=8,
+                     block_n=8, interpret=True, differentiable=True)
+        return jnp.vdot(y, w)
+
+    ga, gb = jax.grad(f, argnums=(0, 1))(a, b)
+    ra, rb = jax.grad(lambda a, b: jnp.vdot(a @ b, w), argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ra),
+                               rtol=GRAD_RTOL, atol=GRAD_ATOL)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(rb),
+                               rtol=GRAD_RTOL, atol=GRAD_ATOL)
+
+
+def test_streaming_tt_vjp_gradcheck():
+    from repro.kernels import ops, ref
+
+    tn = _tiny_tt(8)  # block network: batch == block_tokens
+    path = find_topk_paths(tn, k=1)[0]
+    rng = np.random.default_rng(3)
+    cores = [jnp.asarray(rng.standard_normal(n.dims), jnp.float32)
+             for n in tn.nodes if n.name != "X"]
+    # 20 tokens: exercises the pad-to-block path under grad as well
+    x = jnp.asarray(rng.standard_normal((20, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((20, 16)), jnp.float32)
+
+    def f_pallas(x, cores):
+        y = ops.tt_linear(x, cores, tn, path, block_tokens=8,
+                          interpret=True, differentiable=True)
+        return jnp.vdot(y, w)
+
+    def f_ref(x, cores):
+        return jnp.vdot(ref.tt_linear_ref(x, list(cores), tn, path), w)
+
+    got = jax.grad(f_pallas, argnums=(0, 1))(x, tuple(cores))
+    want = jax.grad(f_ref, argnums=(0, 1))(x, tuple(cores))
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=GRAD_RTOL, atol=GRAD_ATOL)
+    for g, r in zip(got[1], want[1]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=GRAD_RTOL, atol=GRAD_ATOL)
+
+
+# ---------------------------------------------------------------------------
+# 5. planned execution under jax.grad (execution log + gradient match)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def _clean_plan_state():
+    from repro.nn import install_plan
+    from repro.plan import reset_execution_log
+
+    install_plan(None)
+    reset_execution_log()
+    yield
+    install_plan(None)
+    reset_execution_log()
+
+
+def test_planned_pallas_backends_run_under_grad(_clean_plan_state):
+    from repro.nn import LinearSpec, TTConfig, install_plan, linear_apply, linear_init
+    from repro.plan import compile_plan, execution_log, reset_execution_log
+
+    tt = TTConfig(enabled=True, d=2, rank=8, min_dim=64)
+    spec = LinearSpec("demo", 128, 256, tag="mlp", tt=tt)
+    tokens = 32
+    tn = spec.network(tokens)
+    paths = [find_topk_paths(tn, k=4)]
+    lbs = memoised_layer_backwards([tn], k=4)
+    res = global_search(paths, FPGA_VU9P, objective="train-latency",
+                        layer_backwards=lbs)
+    plan = compile_plan([("demo", tn)], res, FPGA_VU9P, arch="unit",
+                        objective="train-latency", tokens=tokens)
+    assert plan.layers[0].backward, "train plan must carry backward ops"
+
+    params = linear_init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (tokens, spec.d_in))
+    w = jax.random.normal(jax.random.PRNGKey(2), (tokens, spec.d_out))
+
+    def loss(params, x):
+        return jnp.vdot(linear_apply(spec, params, x), w)
+
+    install_plan(None)
+    ref_grads = jax.grad(loss, argnums=(0, 1))(params, x)
+
+    for backend in ("tt_gemm", "streaming_tt"):
+        install_plan(plan.with_backend(backend))
+        reset_execution_log()
+        got = jax.jit(jax.grad(loss, argnums=(0, 1)))(params, x)
+        log = execution_log()
+        fwd_backends = {r["backend"] for r in log if r["phase"] == "fwd"}
+        bwd = [r for r in log if r["phase"] == "bwd"]
+        assert fwd_backends == {backend}
+        # the backward pass itself ran through Pallas kernels
+        assert {r["backend"] for r in bwd} <= {"streaming_tt", "tt_gemm"}
+        assert {r["wrt"] for r in bwd} == {"dx", "G1", "G2", "G3", "G4"}
+        for k in ref_grads[0]:
+            np.testing.assert_allclose(
+                np.asarray(got[0][k]), np.asarray(ref_grads[0][k]),
+                rtol=GRAD_RTOL, atol=GRAD_ATOL,
+                err_msg=f"{backend}: grad wrt {k}")
+        np.testing.assert_allclose(
+            np.asarray(got[1]), np.asarray(ref_grads[1]),
+            rtol=GRAD_RTOL, atol=GRAD_ATOL, err_msg=f"{backend}: grad wrt x")
+
+
+@pytest.mark.slow
+def test_model_train_step_runs_pallas_under_grad(_clean_plan_state):
+    """Acceptance: a full model train step with a train-mode plan executes
+    at least one Pallas-backed contraction under ``jax.grad`` and the loss
+    matches the unplanned reference."""
+    from repro.configs import get_config
+    from repro.dse_cli import run_dse_plan
+    from repro.launch.steps import make_train_step
+    from repro.models import api
+    from repro.plan import check_plan_for_config, execution_log
+    from repro.optim import adamw_init
+
+    _, plan = run_dse_plan("tt-lm-100m", smoke=True, top_k=2, tokens=32,
+                           mode="train")
+    cfg = get_config("tt-lm-100m", smoke=True)
+    assert check_plan_for_config(plan, "tt-lm-100m", cfg) == []
+    assert any(lp.backend != "jnp" for lp in plan.layers)
+
+    batch = {
+        "tokens": jnp.zeros((2, 16), jnp.int32),
+        "labels": jnp.ones((2, 16), jnp.int32),
+    }
+    m = api(cfg, plan=plan)
+    params = m.init_params(jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg))
+    _, _, metrics = step(params, adamw_init(params), batch)
+    loss_planned = float(metrics["loss"])
+
+    log = execution_log()
+    bwd = [r for r in log if r["phase"] == "bwd"]
+    assert any(r["backend"] in ("tt_gemm", "streaming_tt") for r in bwd), \
+        "no Pallas-backed contraction executed under jax.grad"
+
+    api(cfg, plan=None)  # clear -> unplanned jnp reference
+    _, _, ref_metrics = jax.jit(make_train_step(cfg))(
+        params, adamw_init(params), batch)
+    assert loss_planned == pytest.approx(float(ref_metrics["loss"]),
+                                         rel=1e-4)
+
+
+def test_jnp_forward_with_pallas_backward_ops_routes_vjp(_clean_plan_state):
+    """A layer whose forward is jnp but whose backward ops name Pallas
+    backends must still execute the searched backward through the VJP
+    (the auto-compiler emits this pairing when only the weight-gradient
+    GEMMs clear the kernel threshold)."""
+    import dataclasses
+
+    from repro.nn import LinearSpec, TTConfig, install_plan, linear_apply, linear_init
+    from repro.plan import compile_plan, execution_log
+
+    tt = TTConfig(enabled=True, d=2, rank=8, min_dim=64)
+    spec = LinearSpec("demo", 128, 256, tag="mlp", tt=tt)
+    tokens = 16
+    tn = spec.network(tokens)
+    res = global_search([find_topk_paths(tn, k=4)], FPGA_VU9P,
+                        objective="train-latency",
+                        layer_backwards=memoised_layer_backwards([tn], k=4))
+    plan = compile_plan([("demo", tn)], res, FPGA_VU9P, tokens=tokens)
+    lp = plan.layers[0].with_backend("tt_gemm")
+    lp = dataclasses.replace(lp, backend="jnp")  # jnp fwd, tt_gemm bwd
+    install_plan(dataclasses.replace(plan, layers=(lp,)))
+
+    params = linear_init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (tokens, spec.d_in))
+    jax.grad(lambda p: jnp.sum(linear_apply(spec, p, x) ** 2))(params)
+    bwd = [r for r in execution_log() if r["phase"] == "bwd"]
+    assert bwd and all(r["backend"] == "tt_gemm" for r in bwd)
+
+
+def test_with_backend_forces_backward_ops_too(_clean_plan_state):
+    from repro.plan import compile_plan
+
+    tokens = 32
+    from repro.nn import LinearSpec, TTConfig
+
+    tt = TTConfig(enabled=True, d=2, rank=8, min_dim=64)
+    spec = LinearSpec("demo", 128, 256, tag="mlp", tt=tt)
+    tn = spec.network(tokens)
+    res = global_search([find_topk_paths(tn, k=4)], FPGA_VU9P,
+                        objective="train-latency",
+                        layer_backwards=memoised_layer_backwards([tn], k=4))
+    plan = compile_plan([("demo", tn)], res, FPGA_VU9P, tokens=tokens)
+    forced = plan.with_backend("tt_gemm").layers[0]
+    assert all(op.backend == "tt_gemm" for op in forced.backward)
+    forced = plan.with_backend("jnp").layers[0]
+    assert all(op.backend == "jnp" for op in forced.backward)
+    forced = plan.with_backend("streaming_tt").layers[0]
+    assert all(op.backend == ("streaming_tt" if op.wrt == "dx" else "tt_gemm")
+               for op in forced.backward)
+
+
+def test_partial_backward_list_is_caught_and_defaulted(_clean_plan_state):
+    """validate_plan flags a backward list that misses a gradient; the
+    executor fills the gap with defaults instead of KeyError-ing inside
+    the grad trace."""
+    import dataclasses
+
+    from repro.nn import LinearSpec, TTConfig, install_plan, linear_apply, linear_init
+    from repro.plan import compile_plan, validate_plan
+
+    tt = TTConfig(enabled=True, d=2, rank=8, min_dim=64)
+    spec = LinearSpec("demo", 128, 256, tag="mlp", tt=tt)
+    tokens = 16
+    tn = spec.network(tokens)
+    res = global_search([find_topk_paths(tn, k=4)], FPGA_VU9P,
+                        objective="train-latency",
+                        layer_backwards=memoised_layer_backwards([tn], k=4))
+    plan = compile_plan([("demo", tn)], res, FPGA_VU9P, tokens=tokens)
+    lp = plan.layers[0]
+    partial = dataclasses.replace(
+        lp, backward=tuple(op for op in lp.backward if op.wrt != "G2"))
+    broken = dataclasses.replace(plan, layers=(partial,))
+    problems = validate_plan(broken, [("demo", tn)])
+    assert any("G2" in p or "gradients" in p for p in problems)
+
+    # executor robustness: installing it anyway still computes correct grads
+    install_plan(broken)
+    params = linear_init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (tokens, spec.d_in))
+    got = jax.grad(lambda p: jnp.sum(linear_apply(spec, p, x) ** 2))(params)
+    install_plan(None)
+    ref = jax.grad(lambda p: jnp.sum(linear_apply(spec, p, x) ** 2))(params)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                                   rtol=GRAD_RTOL, atol=GRAD_ATOL)
+
+
+def test_inference_plan_still_differentiable_with_default_backward(
+        _clean_plan_state):
+    """A v1-style (inference) plan has no backward entries; the executor
+    derives MAC-optimal backward paths and still runs Pallas under grad."""
+    from repro.nn import LinearSpec, TTConfig, install_plan, linear_apply, linear_init
+    from repro.plan import compile_plan, execution_log
+
+    tt = TTConfig(enabled=True, d=2, rank=8, min_dim=64)
+    spec = LinearSpec("demo", 128, 256, tag="mlp", tt=tt)
+    tokens = 16
+    tn = spec.network(tokens)
+    res = global_search([find_topk_paths(tn, k=4)], FPGA_VU9P)
+    plan = compile_plan([("demo", tn)], res, FPGA_VU9P, tokens=tokens)
+    assert plan.layers[0].backward == ()
+
+    params = linear_init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (tokens, spec.d_in))
+
+    install_plan(None)
+    ref_grad = jax.grad(
+        lambda p: jnp.sum(linear_apply(spec, p, x) ** 2))(params)
+    install_plan(plan.with_backend("tt_gemm"))
+    got = jax.grad(lambda p: jnp.sum(linear_apply(spec, p, x) ** 2))(params)
+    bwd = [r for r in execution_log() if r["phase"] == "bwd"]
+    assert bwd and {r["backend"] for r in bwd} <= {"tt_gemm", "streaming_tt"}
+    for k in ref_grad:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref_grad[k]),
+                                   rtol=GRAD_RTOL, atol=GRAD_ATOL)

@@ -74,6 +74,65 @@ def test_model_dse_layers_covers_families():
     assert "head" in names
 
 
+def test_mode_train_report_and_plan():
+    """--mode train: decomposed per-layer latencies + a v2 plan with
+    backward entries."""
+    from repro.dse_cli import run_dse_plan
+
+    report, plan = run_dse_plan("tt-lm-100m", smoke=True, top_k=2, tokens=32,
+                                mode="train")
+    assert report["mode"] == "train"
+    assert report["objective"] == "train-latency"
+    for layer in report["layers"]:
+        assert layer["latency_s"] == pytest.approx(
+            layer["fwd_latency_s"] + layer["bwd_latency_s"]
+            + layer["update_latency_s"], rel=1e-12)
+        assert layer["bwd_latency_s"] > 0
+        assert {b["wrt"] for b in layer["backward"]} >= {"dx"}
+    assert report["total_latency_s"] == pytest.approx(
+        report["total_fwd_latency_s"] + report["total_bwd_latency_s"]
+        + report["total_update_latency_s"], rel=1e-12)
+    assert plan.version == 2
+    assert all(lp.backward for lp in plan.layers)
+    assert plan.objective == "train-latency"
+
+
+def test_mode_both_reports_divergence():
+    r = run_dse("vit_ti4/cifar10", top_k=4, mode="both")
+    assert r["mode"] == "both"
+    assert r["infer"]["mode"] == "infer" and r["train"]["mode"] == "train"
+    assert r["n_divergent_layers"] == len(r["divergent_layers"]) > 0
+    named = {l["name"] for l in r["infer"]["layers"]}
+    assert all(d["name"] in named for d in r["divergent_layers"])
+
+
+def test_mode_and_backend_validation():
+    from repro.dse_cli import run_dse_plan
+
+    with pytest.raises(KeyError, match="mode"):
+        run_dse("tt-lm-100m", mode="no-such-mode")
+    with pytest.raises(ValueError, match="train-latency"):
+        run_dse("tt-lm-100m", mode="train", objective="edp")
+    with pytest.raises(ValueError, match="vectorized"):
+        run_dse("tt-lm-100m", mode="train", engine="scalar")
+    # early validation — before any search work happens
+    with pytest.raises(ValueError, match="backend"):
+        run_dse_plan("tt-lm-100m", smoke=True, plan_backend="cuda")
+
+
+def test_api_rejects_unknown_plan_backend():
+    """models.api(cfg, plan_backend=...) validates the backend up front."""
+    from repro.models import api
+    from repro.nn import install_plan
+
+    cfg = get_config("tt-lm-100m", smoke=True)
+    with pytest.raises(ValueError, match="plan_backend"):
+        api(cfg, plan={"attn.wq": 0}, plan_backend="no-such-backend")
+    with pytest.raises(ValueError, match="force_backend"):
+        install_plan({"attn.wq": 0}, force_backend="no-such-backend")
+    install_plan(None)
+
+
 @pytest.mark.slow
 def test_module_invocation_subprocess():
     """The documented entry point: PYTHONPATH=src python -m repro.dse ..."""

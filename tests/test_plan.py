@@ -80,6 +80,60 @@ def test_plan_roundtrip_bit_equal(tmp_path):
     assert loaded.dumps() == text
 
 
+def test_v1_plan_migrates_to_v2_bit_equal(tmp_path):
+    """A v1 plan (no ``backward`` entries) loads, upgrades to v2, and the
+    migrated serialization round-trips byte-identically."""
+    _, _, _, plan = _unit_problem()
+    d = plan.to_json()
+    d["version"] = 1
+    for layer in d["layers"]:
+        layer.pop("backward")
+        layer.pop("bwd_latency_s")
+    v1_text = json.dumps(d, indent=2, sort_keys=True) + "\n"
+
+    migrated = ExecutionPlan.loads(v1_text)
+    from repro.plan import PLAN_FORMAT_VERSION
+
+    assert migrated.version == PLAN_FORMAT_VERSION == 2
+    assert all(lp.backward == () for lp in migrated.layers)
+    # everything but the version/backward fields survives untouched
+    assert migrated.names == plan.names
+    assert [lp.path_steps for lp in migrated.layers] == [
+        lp.path_steps for lp in plan.layers]
+
+    v2_text = migrated.dumps()
+    assert ExecutionPlan.loads(v2_text).dumps() == v2_text  # bit-equal
+    # migration is idempotent at the JSON level too
+    from repro.plan import migrate_plan_json
+
+    assert migrate_plan_json(json.loads(v2_text)) == json.loads(v2_text)
+
+
+def test_train_plan_backward_ops_roundtrip():
+    from repro.core import memoised_layer_backwards
+    from repro.plan import BackwardOp
+
+    tokens = 32
+    tt = TTConfig(enabled=True, d=2, rank=8, min_dim=64)
+    spec = LinearSpec("demo", 128, 256, tag="mlp", tt=tt)
+    tn = spec.network(tokens)
+    res = global_search([find_topk_paths(tn, k=4)], FPGA_VU9P,
+                        objective="train-latency",
+                        layer_backwards=memoised_layer_backwards([tn], k=4))
+    plan = compile_plan([("demo", tn)], res, FPGA_VU9P,
+                        arch="unit", objective="train-latency", tokens=tokens)
+    lp = plan.layers[0]
+    assert [op.wrt for op in lp.backward] == ["dx", "G1", "G2", "G3", "G4"]
+    assert all(op.backend in BACKENDS and op.path_steps
+               for op in lp.backward)
+    text = plan.dumps()
+    again = ExecutionPlan.loads(text)
+    assert again == plan and again.dumps() == text
+    # BackwardOp validation: streaming is dx-only
+    with pytest.raises(ValueError, match="streaming"):
+        BackwardOp("G1", 0, ((0, 1),), "streaming_tt")
+
+
 def test_plan_version_and_format_guard():
     _, _, _, plan = _unit_problem()
     d = plan.to_json()
@@ -296,11 +350,11 @@ def test_kernel_routing_restricted_to_single_device():
 
 
 def test_tiling_clamped_to_runtime_shapes():
-    from repro.plan.executor import _clamp_block
+    from repro.kernels.ops import clamp_block
 
-    assert _clamp_block(256, 4) == 8      # decode-step batch: one tiny block
-    assert _clamp_block(256, 100) == 128  # next pow2 >= dim
-    assert _clamp_block(64, 1000) == 64   # plan block already smaller
+    assert clamp_block(256, 4) == 8      # decode-step batch: one tiny block
+    assert clamp_block(256, 100) == 128  # next pow2 >= dim
+    assert clamp_block(64, 1000) == 64   # plan block already smaller
 
     # behavioural: a plan compiled at 32 tokens executes correctly (and
     # without inflating to the plan block) on an 8-token batch
