@@ -1,0 +1,58 @@
+"""BENCH_dse — the machine-readable DSE perf trajectory across PRs.
+
+Writes ``results/benchmarks/BENCH_dse.json``: per arch, the cost-table
+build time (fixed target and hw-batched over the architecture space),
+the searched-space size, and the best latency per architecture axis
+(fixed vs co-searched) — so regressions in the search engine or in the
+quality of the co-searched optimum show up as diffs in one file.
+
+  PYTHONPATH=src python -m benchmarks.run --only bench_dse
+"""
+
+from __future__ import annotations
+
+from repro.core import build_cost_tables, build_cost_tables_hw, global_search
+from repro.dse_cli import VISION_ARCHS, dse_problems, model_layer_paths
+from repro.hw import ArchSpace, get_target
+
+from .common import emit, timed
+
+ARCHS = list(VISION_ARCHS) + ["tt-lm-100m"]
+TOP_K = 4
+
+
+def run() -> list[dict]:
+    rows = []
+    for arch in ARCHS:
+        named, _ = dse_problems(arch)
+        layer_paths = model_layer_paths(named, TOP_K)
+
+        base = get_target("fpga_vu9p")
+        _, fixed_build_s = timed(build_cost_tables, layer_paths, base)
+        space = ArchSpace(base=base)
+        cands = space.candidates()
+        per_hw, hw_build_s = timed(
+            build_cost_tables_hw, layer_paths, cands, repeat=1)
+        co = global_search(layer_paths, hw_space=cands,
+                           hw_tables=[t.seconds for t in per_hw])
+        fixed = next(c for c in co.hw_candidates if c.hw.name == base.name)
+        rows.append({
+            "arch": arch,
+            "n_layers": len(layer_paths),
+            "n_cells": per_hw[0].n_cells,
+            "n_unique_gemm_evals": per_hw[0].n_unique_gemm_evals,
+            "table_build_s": fixed_build_s,
+            "hw_space_size": len(cands),
+            "hw_batched_build_s": hw_build_s,
+            "best_latency_fixed_s": fixed.total_latency_s,
+            "best_latency_cosearch_s": co.total_latency_s,
+            "cosearch_improvement_pct": (
+                100.0 * (1.0 - co.total_latency_s / fixed.total_latency_s)),
+            "chosen_arch": co.hw.name,
+        })
+    emit("BENCH_dse", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -15,6 +15,7 @@ import time
 import traceback
 
 from . import (
+    bench_dse,
     bench_dse_overhead,
     bench_plan_exec,
     fig3_paths,
@@ -24,6 +25,7 @@ from . import (
     table3_latency,
     table4_efficiency,
     table5_training_latency,
+    table6_hw_cosearch,
 )
 
 SUITES = {
@@ -32,10 +34,12 @@ SUITES = {
     "table3": table3_latency.run,
     "table4": table4_efficiency.run,
     "table5": table5_training_latency.run,
+    "table6": table6_hw_cosearch.run,
     "fig3": fig3_paths.run,
     "fig5": fig5_dataflow.run,
     "dse_overhead": bench_dse_overhead.run,
     "plan_exec": bench_plan_exec.run,
+    "bench_dse": bench_dse.run,
 }
 
 

@@ -1,0 +1,50 @@
+"""Table 6 — fixed ``fpga_vu9p`` vs co-searched architecture.
+
+For the paper's vision workloads plus the tt-lm config, and for both the
+inference and training objectives, run the joint (architecture, path,
+dataflow) co-search over the feasible VU9P-budget space
+(``repro.hw.ArchSpace``) and report the latency delta plus the chosen
+(R x C, SRAM split, bandwidth) per arch.  The co-searched optimum can
+never be worse than the fixed target (the base architecture is in the
+space); the interesting question is *how much* re-shaping the same
+silicon buys per workload — the FETTA/HEAT observation.
+
+  PYTHONPATH=src python -m benchmarks.run --only table6
+"""
+
+from __future__ import annotations
+
+from repro.dse_cli import VISION_ARCHS, run_dse
+
+from .common import emit
+
+ARCHS = list(VISION_ARCHS) + ["tt-lm-100m"]
+
+
+def run() -> list[dict]:
+    rows = []
+    for arch in ARCHS:
+        for mode in ("infer", "train"):
+            report = run_dse(arch, top_k=4, mode=mode, hw_search="budget")
+            hs = report["hw_search"]
+            chosen, fixed = hs["chosen"], hs["fixed"]
+            rows.append({
+                "arch": arch,
+                "mode": mode,
+                "objective": report["objective"],
+                "n_candidates": hs["n_candidates"],
+                "fixed_latency_ms": fixed["total_latency_s"] * 1e3,
+                "cosearch_latency_ms": chosen["total_latency_s"] * 1e3,
+                "improvement_pct": hs["improvement_pct"],
+                "chosen_pe": f"{chosen['pe_rows']}x{chosen['pe_cols']}",
+                "chosen_sram_kib": (f"{chosen['sram_input_kib']}+"
+                                    f"{chosen['sram_output_kib']}"),
+                "chosen_bw_words": chosen["dram_words_per_cycle"],
+                "chosen_strategy": chosen["strategy"],
+            })
+    emit("table6_hw_cosearch", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -11,13 +11,15 @@ from collections import Counter
 from repro.core import (
     ALL_DATAFLOWS,
     ALL_PARTITIONINGS,
-    FPGA_VU9P,
     find_topk_paths,
     layer_latency,
     reconstruction_path,
 )
 from repro.dse_cli import run_dse
+from repro.hw import get_target
 from repro.models.vision import vit_ti4_layers
+
+FPGA_VU9P = get_target("fpga_vu9p")
 
 
 def best(path):
@@ -66,6 +68,16 @@ def main():
     non_mac = sum(1 for l in report["layers"] if not l["mac_optimal_path"])
     print(f"  dataflows {dict(dfs)}; {non_mac}/{report['n_layers']} layers "
           f"pick a non-MAC-optimal path")
+
+    # joint (architecture, path, dataflow) co-search under the VU9P budget
+    co = run_dse("vit_ti4/cifar10", top_k=4, hw_search="budget")
+    hs = co["hw_search"]
+    chosen, fixed = hs["chosen"], hs["fixed"]
+    print(f"\n[vit_ti4/cifar10] hw co-search over {hs['n_candidates']} "
+          f"feasible archs: {fixed['total_latency_s'] * 1e3:.3f} ms "
+          f"(fixed {fixed['name']}) -> {chosen['total_latency_s'] * 1e3:.3f} "
+          f"ms on {chosen['pe_rows']}x{chosen['pe_cols']} PEs "
+          f"({hs['improvement_pct']:.1f}% faster)")
 
 
 if __name__ == "__main__":

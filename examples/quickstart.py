@@ -1,5 +1,6 @@
 """Quickstart: tensorize one layer, search paths, run the DSE, execute —
-then compile the DSE result into an execution plan and run *that*.
+then compile the DSE result into an execution plan and run *that*, and
+finally co-search the hardware architecture itself.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,15 +9,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    FPGA_VU9P,
-    TPU_V5E,
-    explore_model,
-    find_topk_paths,
-    tt_linear_network,
-)
+from repro.core import explore_model, find_topk_paths, tt_linear_network
+from repro.hw import ArchSpace, get_target
 from repro.nn import LinearSpec, TTConfig, install_plan, linear_apply, linear_init
 from repro.plan import ExecutionPlan, compile_plan, execution_log
+
+FPGA_VU9P = get_target("fpga_vu9p")
+TPU_V5E = get_target("tpu_v5e")
 
 # 1. A 1024 -> 4096 projection, TT-factorized at rank 16 --------------------
 tt = TTConfig(enabled=True, d=3, rank=16, min_dim=512)
@@ -62,3 +61,13 @@ err = float(jnp.max(jnp.abs(y_planned - y)))
 ran = [(r["name"], r["backend"]) for r in execution_log()]
 print(f"planned execution {ran}: max |planned - default| = {err:.2e}")
 assert err < 1e-4
+
+# 6. Joint hardware co-search: re-shape the same silicon budget ------------
+#    (every feasible PE shape / SRAM split / bandwidth tier of the FPGA)
+space = ArchSpace(base=FPGA_VU9P)
+co = explore_model([tn], hw_space=space.candidates())
+fixed = results[FPGA_VU9P.name]
+assert co.total_latency_s <= fixed.total_latency_s  # base is in the space
+print(f"hw co-search over {len(co.hw_candidates)} candidates: "
+      f"{fixed.total_latency_s * 1e6:.1f} us (fixed {FPGA_VU9P.name}) -> "
+      f"{co.total_latency_s * 1e6:.1f} us on {co.hw.name}")

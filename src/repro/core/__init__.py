@@ -34,7 +34,9 @@ from .cost_table import (
     TrainCostTables,
     build_cost_table_vectorized,
     build_cost_tables,
+    build_cost_tables_hw,
     build_train_cost_tables,
+    build_train_cost_tables_hw,
 )
 from .backward import (
     BackwardProblem,
@@ -49,6 +51,7 @@ from .backward import (
 )
 from .dse import (
     DSEResult,
+    HwCandidateResult,
     LayerChoice,
     brute_force_search,
     build_cost_table,
@@ -67,13 +70,14 @@ __all__ = [
     "FPGA_VU9P", "HardwareConfig", "Partitioning", "gemm_latency",
     "layer_latency", "simulate", "TPU_V5E",
     "CostTables", "build_cost_table", "build_cost_table_vectorized",
-    "build_cost_tables",
+    "build_cost_tables", "build_cost_tables_hw",
     "BackwardChoice", "TrainCostTables", "build_train_cost_tables",
+    "build_train_cost_tables_hw",
     "BackwardProblem", "LayerBackward", "TrainCostWeights",
     "backward_networks", "grad_core_network", "grad_input_network",
     "layer_backward", "memoised_layer_backwards", "update_seconds",
-    "DSEResult", "LayerChoice", "brute_force_search", "explore_model",
-    "global_search", "pareto_front",
+    "DSEResult", "HwCandidateResult", "LayerChoice", "brute_force_search",
+    "explore_model", "global_search", "pareto_front",
     "TTMatrix", "reconstruction_error", "tt_rand", "tt_svd",
     "core_tensors", "execute_path",
 ]

@@ -26,6 +26,16 @@ the space:
 
 The engine also returns per-cell DRAM traffic and per-path MACs, which
 the ``repro.dse`` CLI combines into the energy-delay-product objective.
+
+**Hardware axis.**  The same three passes batch over *hardware
+candidates* (``build_cost_tables_hw``): candidates sharing an array
+geometry share compiled programs, candidates sharing a memory profile
+(SRAM capacity, bandwidth, word width, per-GEMM overhead) share one
+vectorized model evaluation, and each program is replayed once over the
+``(profile, dataflow)`` axes.  Per candidate the result is bit-identical
+to a scalar ``simulate()`` sweep with that candidate — the joint
+(architecture, path, dataflow) search of ``dse.global_search(hw_space=
+...)`` therefore inherits the exhaustive-optimality guarantee.
 """
 
 from __future__ import annotations
@@ -103,17 +113,26 @@ class _GemmRegistry:
         return idx
 
     def evaluate(
-        self, dataflows: Sequence[Dataflow], hw: HardwareConfig
+        self,
+        dataflows: Sequence[Dataflow],
+        profiles: Sequence[HardwareConfig],
     ) -> tuple[np.ndarray, np.ndarray]:
-        """(cycles, traffic_words) as [n_rows, n_dataflows] float64."""
+        """(cycles, traffic_words) as [n_rows, n_profiles, n_dataflows].
+
+        A *profile* is a representative hw candidate for everything the
+        per-GEMM model reads besides the array geometry (which lives in
+        the rows): SRAM capacity, word width, bandwidth, overhead.
+        """
         rows = np.asarray(self.rows, dtype=np.int64).reshape(-1, 5)
         M, K, N, R, C = (rows[:, i] for i in range(5))
-        cyc = np.empty((rows.shape[0], len(dataflows)))
+        cyc = np.empty((rows.shape[0], len(profiles), len(dataflows)))
         tra = np.empty_like(cyc)
-        for d_idx, df in enumerate(dataflows):
-            cycles, _, traffic = gemm_cost_model(M, K, N, df, R, C, hw)
-            cyc[:, d_idx] = cycles
-            tra[:, d_idx] = traffic
+        for p_idx, prof_hw in enumerate(profiles):
+            for d_idx, df in enumerate(dataflows):
+                cycles, _, traffic = gemm_cost_model(M, K, N, df, R, C,
+                                                     prof_hw)
+                cyc[:, p_idx, d_idx] = cycles
+                tra[:, p_idx, d_idx] = traffic
         return cyc, tra
 
 
@@ -163,6 +182,124 @@ def _layer_key(paths: Sequence[CandidatePath]) -> tuple:
     )
 
 
+def build_cost_tables_hw(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    hw_list: Sequence[HardwareConfig],
+    partitionings: Sequence[Partitioning] = ALL_PARTITIONINGS,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+) -> tuple[CostTables, ...]:
+    """Populate T[l, p, c, d] for every hardware candidate in one build.
+
+    The hw axis shares all three passes: candidates with the same array
+    geometry ``(pe_rows, pe_cols)`` share compiled programs and registry
+    rows, candidates with the same memory profile share one vectorized
+    model evaluation, and each program replays once over the
+    ``(profile, dataflow)`` axes before broadcasting to the candidates.
+    Returns one :class:`CostTables` per candidate, aligned with
+    ``hw_list`` — each bit-identical to a scalar ``simulate()`` sweep of
+    that candidate.  ``build_seconds`` / ``n_unique_gemm_evals`` report
+    the *shared* batched build on every element.
+    """
+    t0 = time.perf_counter()
+    hw_list = tuple(hw_list)
+    if not hw_list:
+        raise ValueError("hw_list must name at least one hardware candidate")
+    partitionings = tuple(partitionings)
+    dataflows = tuple(dataflows)
+
+    # pass 1 — dedup layers; compile programs once per array geometry
+    unique_layers: dict[tuple, list[int]] = {}
+    for l, paths in enumerate(layer_paths):
+        unique_layers.setdefault(_layer_key(paths), []).append(l)
+
+    geom_index: dict[tuple[int, int], int] = {}
+    geom_reps: list[HardwareConfig] = []
+    geom_of_hw: list[int] = []
+    for hw in hw_list:
+        g = (hw.pe_rows, hw.pe_cols)
+        if g not in geom_index:
+            geom_index[g] = len(geom_reps)
+            geom_reps.append(hw)
+        geom_of_hw.append(geom_index[g])
+    hw_by_geom: dict[int, list[int]] = {}
+    for h, g in enumerate(geom_of_hw):
+        hw_by_geom.setdefault(g, []).append(h)
+
+    reg = _GemmRegistry()
+    # programs[key][p_idx][part][g_idx] -> _Program
+    programs: dict[tuple, list[dict[Partitioning, list[_Program]]]] = {}
+    for key, members in unique_layers.items():
+        paths = layer_paths[members[0]]
+        programs[key] = [
+            {part: [_compile_path(path, part, rep, reg) for rep in geom_reps]
+             for part in partitionings}
+            for path in paths
+        ]
+
+    # pass 2 — one vectorized model evaluation per (memory profile,
+    # dataflow); the array geometry is part of the registry rows
+    prof_index: dict[tuple, int] = {}
+    prof_reps: list[HardwareConfig] = []
+    prof_of_hw: list[int] = []
+    for hw in hw_list:
+        p = (hw.sram_input_bytes, hw.bytes_per_word,
+             hw.dram_words_per_cycle, hw.gemm_overhead_cycles)
+        if p not in prof_index:
+            prof_index[p] = len(prof_reps)
+            prof_reps.append(hw)
+        prof_of_hw.append(prof_index[p])
+    cyc, tra = reg.evaluate(dataflows, prof_reps)
+
+    # pass 3 — replay programs (vectorized over (profile, dataflow),
+    # scalar-ordered accumulation so every candidate's table is
+    # bit-identical to its sequential oracle), broadcast per candidate
+    seconds: list[dict[Key, float]] = [{} for _ in hw_list]
+    traffic: list[dict[Key, float]] = [{} for _ in hw_list]
+    macs: list[dict[tuple[int, int], int]] = [{} for _ in hw_list]
+    for key, members in unique_layers.items():
+        paths = layer_paths[members[0]]
+        for p_idx, per_part in enumerate(programs[key]):
+            for part, per_geom in per_part.items():
+                for g_idx, prog in enumerate(per_geom):
+                    tot_c = np.zeros((len(prof_reps), len(dataflows)))
+                    tot_t = np.zeros_like(tot_c)
+                    for op in prog:
+                        if op[0] == "seq":
+                            tot_c = tot_c + cyc[op[1]]
+                            tot_t = tot_t + tra[op[1]]
+                        elif op[0] == "pair":
+                            tot_c = tot_c + np.maximum(cyc[op[1]], cyc[op[2]])
+                            tot_t = tot_t + (tra[op[1]] + tra[op[2]])
+                        else:  # joint: both half-cores stream the split GEMM
+                            tot_c = tot_c + cyc[op[1]]
+                            tot_t = tot_t + 2.0 * tra[op[1]]
+                    for h in hw_by_geom[g_idx]:
+                        secs = tot_c[prof_of_hw[h]] / hw_list[h].freq_hz
+                        tw = tot_t[prof_of_hw[h]]
+                        for d_idx, d in enumerate(dataflows):
+                            s, t = float(secs[d_idx]), float(tw[d_idx])
+                            for l in members:
+                                seconds[h][(l, p_idx, part, d)] = s
+                                traffic[h][(l, p_idx, part, d)] = t
+            for h in range(len(hw_list)):
+                for l in members:
+                    macs[h][(l, p_idx)] = paths[p_idx].macs
+
+    build_s = time.perf_counter() - t0
+    return tuple(
+        CostTables(
+            seconds=seconds[h],
+            traffic_words=traffic[h],
+            macs=macs[h],
+            build_seconds=build_s,
+            n_cells=len(seconds[h]),
+            n_unique_gemm_evals=len(reg.rows),
+            n_unique_layers=len(unique_layers),
+        )
+        for h in range(len(hw_list))
+    )
+
+
 def build_cost_tables(
     layer_paths: Sequence[Sequence[CandidatePath]],
     hw: HardwareConfig,
@@ -170,65 +307,8 @@ def build_cost_tables(
     dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
 ) -> CostTables:
     """Populate T[l, p, c, d] (plus traffic/MACs) with batched evaluation."""
-    t0 = time.perf_counter()
-    partitionings = tuple(partitionings)
-    dataflows = tuple(dataflows)
-
-    # pass 1 — dedup layers and compile programs over the shared registry
-    unique_layers: dict[tuple, list[int]] = {}
-    for l, paths in enumerate(layer_paths):
-        unique_layers.setdefault(_layer_key(paths), []).append(l)
-    reg = _GemmRegistry()
-    programs: dict[tuple, list[dict[Partitioning, _Program]]] = {}
-    for key, members in unique_layers.items():
-        paths = layer_paths[members[0]]
-        programs[key] = [
-            {part: _compile_path(path, part, hw, reg) for part in partitionings}
-            for path in paths
-        ]
-
-    # pass 2 — one vectorized model evaluation per dataflow
-    cyc, tra = reg.evaluate(dataflows, hw)
-
-    # pass 3 — replay programs (vectorized over dataflows, scalar-ordered
-    # accumulation so results are bit-identical to the sequential oracle)
-    seconds: dict[Key, float] = {}
-    traffic: dict[Key, float] = {}
-    macs: dict[tuple[int, int], int] = {}
-    for key, members in unique_layers.items():
-        paths = layer_paths[members[0]]
-        for p_idx, per_part in enumerate(programs[key]):
-            for part, prog in per_part.items():
-                tot_c = np.zeros(len(dataflows))
-                tot_t = np.zeros(len(dataflows))
-                for op in prog:
-                    if op[0] == "seq":
-                        tot_c = tot_c + cyc[op[1]]
-                        tot_t = tot_t + tra[op[1]]
-                    elif op[0] == "pair":
-                        tot_c = tot_c + np.maximum(cyc[op[1]], cyc[op[2]])
-                        tot_t = tot_t + (tra[op[1]] + tra[op[2]])
-                    else:  # joint: both half-cores stream the split GEMM
-                        tot_c = tot_c + cyc[op[1]]
-                        tot_t = tot_t + 2.0 * tra[op[1]]
-                secs = tot_c / hw.freq_hz
-                for d_idx, d in enumerate(dataflows):
-                    s, t = float(secs[d_idx]), float(tot_t[d_idx])
-                    for l in members:
-                        seconds[(l, p_idx, part, d)] = s
-                        traffic[(l, p_idx, part, d)] = t
-            for l in members:
-                macs[(l, p_idx)] = paths[p_idx].macs
-
-    return CostTables(
-        seconds=seconds,
-        traffic_words=traffic,
-        macs=macs,
-        build_seconds=time.perf_counter() - t0,
-        n_cells=len(seconds),
-        n_unique_gemm_evals=len(reg.rows),
-        n_unique_layers=len(unique_layers),
-    )
+    return build_cost_tables_hw(layer_paths, (hw,), partitionings,
+                                dataflows)[0]
 
 
 def build_cost_table_vectorized(
@@ -299,50 +379,31 @@ class TrainCostTables:
         }
 
 
-def build_train_cost_tables(
-    layer_paths: Sequence[Sequence[CandidatePath]],
-    layer_backwards: Sequence,            # Sequence[backward.LayerBackward]
-    hw: HardwareConfig,
-    partitionings: Sequence[Partitioning] = ALL_PARTITIONINGS,
-    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
-    weights: Optional["TrainCostWeights"] = None,
-) -> TrainCostTables:
-    """Populate the training-latency decomposition with batched evaluation.
-
-    Backward problems are flattened into one pseudo-layer list and pushed
-    through the same vectorized engine as the forward table, so identical
-    backward networks across a transformer stack (and across problems)
-    dedup exactly like forward layers do.
-    """
-    from .backward import TrainCostWeights, update_seconds as _upd
-
-    t0 = time.perf_counter()
-    if len(layer_paths) != len(layer_backwards):
-        raise ValueError(
-            f"{len(layer_paths)} forward layers vs "
-            f"{len(layer_backwards)} backward layer problems")
-    weights = weights or TrainCostWeights()
-    partitionings = tuple(partitionings)
-    dataflows = tuple(dataflows)
-
-    fwd = build_cost_tables(layer_paths, hw, partitionings, dataflows)
-
-    # flatten (layer, problem) -> pseudo-layer row for the batched engine
+def _flatten_backwards(
+    layer_backwards: Sequence,
+) -> tuple[list[Sequence[CandidatePath]], list[tuple[int, int]]]:
+    """(layer, problem) -> pseudo-layer rows for the batched engine."""
     flat_paths: list[Sequence[CandidatePath]] = []
     flat_owner: list[tuple[int, int]] = []     # (layer, problem index)
     for l, lb in enumerate(layer_backwards):
         for m, prob in enumerate(lb.problems):
             flat_paths.append(prob.paths)
             flat_owner.append((l, m))
-    bwd_tables = build_cost_tables(flat_paths, hw, partitionings, dataflows)
+    return flat_paths, flat_owner
 
+
+def _assemble_bwd(
+    layer_backwards: Sequence,
+    flat_owner: Sequence[tuple[int, int]],
+    bwd_tables: CostTables,
+    partitionings: Sequence[Partitioning],
+    dataflows: Sequence[Dataflow],
+) -> tuple[dict[BwdKey, float], dict[BwdKey, float],
+           dict[BwdKey, tuple[BackwardChoice, ...]]]:
+    """Per (layer, c, d): sum of each backward problem's argmin path."""
     bwd_seconds: dict[BwdKey, float] = {}
     bwd_traffic: dict[BwdKey, float] = {}
     bwd_choices: dict[BwdKey, tuple[BackwardChoice, ...]] = {}
-    bwd_macs: dict[int, int] = {}
-    for l, lb in enumerate(layer_backwards):
-        bwd_macs[l] = sum(
-            min(p.macs for p in prob.paths) for prob in lb.problems)
     for c in partitionings:
         for d in dataflows:
             per_layer: dict[int, list[BackwardChoice]] = {}
@@ -363,15 +424,87 @@ def build_train_cost_tables(
                 bwd_seconds[key] = sum(ch.latency_s for ch in choices)
                 bwd_choices[key] = tuple(choices)
                 bwd_traffic[key] = per_layer_traffic[l]
+    return bwd_seconds, bwd_traffic, bwd_choices
 
-    upd = {l: _upd(lb.n_params, hw) for l, lb in enumerate(layer_backwards)}
-    return TrainCostTables(
-        fwd=fwd,
-        bwd_seconds=bwd_seconds,
-        bwd_traffic_words=bwd_traffic,
-        bwd_choices=bwd_choices,
-        bwd_macs=bwd_macs,
-        update_seconds=upd,
-        weights=weights,
-        build_seconds=time.perf_counter() - t0,
+
+def build_train_cost_tables_hw(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    layer_backwards: Sequence,            # Sequence[backward.LayerBackward]
+    hw_list: Sequence[HardwareConfig],
+    partitionings: Sequence[Partitioning] = ALL_PARTITIONINGS,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+    weights: Optional["TrainCostWeights"] = None,
+) -> tuple[TrainCostTables, ...]:
+    """The training-latency decomposition for every hardware candidate.
+
+    The forward and (flattened) backward tables are built hw-batched —
+    shared registry rows, one vectorized evaluation per memory profile —
+    then assembled per candidate (the per-problem backward argmin and
+    the DRAM-bound update term both depend on the candidate).
+    """
+    from .backward import TrainCostWeights, update_seconds as _upd
+
+    t0 = time.perf_counter()
+    if len(layer_paths) != len(layer_backwards):
+        raise ValueError(
+            f"{len(layer_paths)} forward layers vs "
+            f"{len(layer_backwards)} backward layer problems")
+    hw_list = tuple(hw_list)
+    weights = weights or TrainCostWeights()
+    partitionings = tuple(partitionings)
+    dataflows = tuple(dataflows)
+
+    fwd_list = build_cost_tables_hw(layer_paths, hw_list, partitionings,
+                                    dataflows)
+    flat_paths, flat_owner = _flatten_backwards(layer_backwards)
+    bwd_list = build_cost_tables_hw(flat_paths, hw_list, partitionings,
+                                    dataflows)
+
+    bwd_macs: dict[int, int] = {}
+    for l, lb in enumerate(layer_backwards):
+        bwd_macs[l] = sum(
+            min(p.macs for p in prob.paths) for prob in lb.problems)
+
+    assembled = []
+    for h, hw in enumerate(hw_list):
+        bwd_seconds, bwd_traffic, bwd_choices = _assemble_bwd(
+            layer_backwards, flat_owner, bwd_list[h], partitionings,
+            dataflows)
+        upd = {l: _upd(lb.n_params, hw)
+               for l, lb in enumerate(layer_backwards)}
+        assembled.append((fwd_list[h], bwd_seconds, bwd_traffic,
+                          bwd_choices, upd))
+    build_s = time.perf_counter() - t0
+    return tuple(
+        TrainCostTables(
+            fwd=fwd,
+            bwd_seconds=bwd_seconds,
+            bwd_traffic_words=bwd_traffic,
+            bwd_choices=bwd_choices,
+            bwd_macs=dict(bwd_macs),
+            update_seconds=upd,
+            weights=weights,
+            build_seconds=build_s,
+        )
+        for fwd, bwd_seconds, bwd_traffic, bwd_choices, upd in assembled
     )
+
+
+def build_train_cost_tables(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    layer_backwards: Sequence,            # Sequence[backward.LayerBackward]
+    hw: HardwareConfig,
+    partitionings: Sequence[Partitioning] = ALL_PARTITIONINGS,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+    weights: Optional["TrainCostWeights"] = None,
+) -> TrainCostTables:
+    """Populate the training-latency decomposition with batched evaluation.
+
+    Backward problems are flattened into one pseudo-layer list and pushed
+    through the same vectorized engine as the forward table, so identical
+    backward networks across a transformer stack (and across problems)
+    dedup exactly like forward layers do.
+    """
+    return build_train_cost_tables_hw(
+        layer_paths, layer_backwards, (hw,), partitionings, dataflows,
+        weights=weights)[0]

@@ -9,6 +9,17 @@ independent per-layer argmins; the best strategy wins.  This is exhaustive
 over the (pruned) space, so the returned configuration is optimal within
 it — matching the paper's "mathematically guaranteeing the optimal
 solution with minimal overhead".
+
+**Hardware co-search.**  ``global_search(hw_space=...)`` adds an outer
+loop over architecture candidates (``repro.hw.ArchSpace``): the
+architecture is shared by every layer (non-separable), so each feasible
+candidate gets its own hierarchical argmin over a cost table built by
+the hw-batched engine (``cost_table.build_cost_tables_hw`` — shared
+registry rows, one vectorized evaluation per memory profile), and the
+best (architecture, per-layer choices) pair wins.  The outer loop is
+exhaustive over the candidate list, so the optimality guarantee extends
+to the joint (arch, path, partitioning, dataflow) space — for the
+``latency`` and ``train-latency`` objectives alike.
 """
 
 from __future__ import annotations
@@ -53,12 +64,27 @@ class LayerChoice:
 
 
 @dataclasses.dataclass(frozen=True)
+class HwCandidateResult:
+    """One architecture candidate's best configuration (hw co-search)."""
+
+    hw: HardwareConfig
+    strategy: str
+    total_latency_s: float
+
+
+@dataclasses.dataclass(frozen=True)
 class DSEResult:
     strategy: str
     choices: tuple[LayerChoice, ...]
     total_latency_s: float
     cost_table: Mapping[tuple[int, int, Partitioning, Dataflow], float]
     objective: str = "latency"
+    #: the architecture the choices were evaluated on (the winning
+    #: candidate under ``hw_space=``, else the fixed target)
+    hw: HardwareConfig | None = None
+    #: per-candidate outcomes when ``hw_space=`` was searched (aligned
+    #: with the candidate list; empty for fixed-target searches)
+    hw_candidates: tuple[HwCandidateResult, ...] = ()
 
     @property
     def per_layer_latency(self) -> tuple[float, ...]:
@@ -101,6 +127,116 @@ def build_cost_table(
     return table
 
 
+def _hierarchical_argmin(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    table: Mapping[tuple[int, int, Partitioning, Dataflow], float],
+    strategy_space: Mapping[str, Sequence[Partitioning]],
+    dataflows: Sequence[Dataflow],
+    train=None,
+) -> tuple[str, tuple[LayerChoice, ...], float]:
+    """Strategy loop + independent per-layer argmins over a built table."""
+    best_cost = float("inf")
+    best: tuple[str, tuple[LayerChoice, ...]] | None = None
+    for h, c_h in strategy_space.items():
+        choices: list[LayerChoice] = []
+        cost_h = 0.0
+        for l, paths in enumerate(layer_paths):
+            lat, arg = min(
+                ((table[(l, p, c, d)], (p, c, d))
+                 for p in range(len(paths))
+                 for c in c_h
+                 for d in dataflows),
+                key=lambda t: t[0],
+            )
+            p, c, d = arg
+            if train is not None:
+                w = train.weights
+                choices.append(LayerChoice(
+                    l, p, paths[p], c, d, lat,
+                    backward=train.bwd_choices[(l, c, d)],
+                    fwd_latency_s=w.fwd * train.fwd.seconds[(l, p, c, d)],
+                    bwd_latency_s=w.bwd * train.bwd_seconds[(l, c, d)],
+                    update_latency_s=w.update * train.update_seconds[l],
+                ))
+            else:
+                choices.append(LayerChoice(l, p, paths[p], c, d, lat))
+            cost_h += lat
+        if cost_h < best_cost:
+            best_cost = cost_h
+            best = (h, tuple(choices))
+    assert best is not None
+    return best[0], best[1], best_cost
+
+
+def _global_search_hw(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    hw_space: Sequence[HardwareConfig],
+    strategy_space: Mapping[str, Sequence[Partitioning]],
+    dataflows: Sequence[Dataflow],
+    objective: str,
+    layer_backwards: Sequence | None,
+    train_weights,
+    hw_tables,
+    hw_train_tables,
+) -> DSEResult:
+    """Outer architecture loop: per-candidate argmin, best candidate wins.
+
+    Ties resolve to the earliest candidate — architecture spaces list the
+    base target first, so equality means "the default was already
+    optimal".
+    """
+    hw_space = tuple(hw_space)
+    if not hw_space:
+        raise ValueError("hw_space must contain at least one candidate")
+    all_parts = sorted({c for cs in strategy_space.values() for c in cs})
+    trains = None
+    if objective == "train-latency":
+        if hw_train_tables is not None:
+            trains = tuple(hw_train_tables)
+        else:
+            if layer_backwards is None:
+                raise ValueError(
+                    "objective='train-latency' requires layer_backwards "
+                    "(see repro.core.backward.memoised_layer_backwards) "
+                    "or pre-built hw_train_tables")
+            from .cost_table import build_train_cost_tables_hw
+
+            trains = build_train_cost_tables_hw(
+                layer_paths, layer_backwards, hw_space, all_parts,
+                dataflows, weights=train_weights)
+        if len(trains) != len(hw_space):
+            raise ValueError(
+                f"{len(trains)} train tables vs {len(hw_space)} candidates")
+        tables = [t.train_seconds() for t in trains]
+    elif hw_tables is not None:
+        tables = list(hw_tables)
+        if len(tables) != len(hw_space):
+            raise ValueError(
+                f"{len(tables)} hw_tables vs {len(hw_space)} candidates")
+    else:
+        from .cost_table import build_cost_tables_hw
+
+        tables = [t.seconds for t in
+                  build_cost_tables_hw(layer_paths, hw_space, all_parts,
+                                       dataflows)]
+
+    candidates: list[HwCandidateResult] = []
+    best_cost = float("inf")
+    best: tuple[int, str, tuple[LayerChoice, ...]] | None = None
+    for i, hw_i in enumerate(hw_space):
+        strategy, choices, cost = _hierarchical_argmin(
+            layer_paths, tables[i], strategy_space, dataflows,
+            trains[i] if trains is not None else None)
+        candidates.append(HwCandidateResult(hw_i, strategy, cost))
+        if cost < best_cost:
+            best_cost = cost
+            best = (i, strategy, choices)
+    assert best is not None
+    i, strategy, choices = best
+    return DSEResult(strategy, choices, best_cost, tables[i], objective,
+                     hw=hw_space[i], hw_candidates=tuple(candidates))
+
+
 def global_search(
     layer_paths: Sequence[Sequence[CandidatePath]],
     hw: HardwareConfig = FPGA_VU9P,
@@ -114,6 +250,9 @@ def global_search(
     layer_backwards: Sequence | None = None,
     train_weights=None,
     train_tables=None,
+    hw_space: Sequence[HardwareConfig] | None = None,
+    hw_tables: Sequence[Mapping] | None = None,
+    hw_train_tables: Sequence | None = None,
 ) -> DSEResult:
     """Algorithm 1: global strategy loop + independent per-layer argmins.
 
@@ -130,11 +269,47 @@ def global_search(
     ``backward.memoised_layer_backwards``) is required; the returned
     choices carry the per-gradient backward paths and the
     fwd/bwd/update latency decomposition.
+
+    ``hw_space`` turns on the joint architecture co-search: the fixed
+    ``hw`` target is ignored, every candidate is evaluated through the
+    hw-batched cost-table engine (``hw_tables`` / ``hw_train_tables``
+    may supply pre-built per-candidate tables, aligned with the space),
+    and the result records the winning architecture (``result.hw``) plus
+    every candidate's outcome (``result.hw_candidates``).
     """
     if objective not in ("latency", "train-latency"):
         raise ValueError(
             f"unknown objective {objective!r}; have ('latency', 'train-latency')"
             " — EDP goes through the ``table`` argument")
+    if hw_space is not None:
+        if table is not None or train_tables is not None:
+            raise ValueError(
+                "hw_space builds one table per candidate; pass per-candidate "
+                "tables via hw_tables / hw_train_tables instead of "
+                "table / train_tables")
+        if simulate_fn is not simulate or engine == "scalar":
+            raise ValueError(
+                "hw_space is evaluated through the batched closed-form "
+                "engine; custom simulate_fn / engine='scalar' are not "
+                "supported")
+        if train_weights is not None and hw_train_tables is not None:
+            raise ValueError(
+                "train_weights must be baked into hw_train_tables at build "
+                "time; passing both is ambiguous")
+        if objective == "train-latency" and hw_tables is not None:
+            raise ValueError(
+                "objective='train-latency' consumes hw_train_tables; "
+                "hw_tables would be silently ignored")
+        if objective != "train-latency" and hw_train_tables is not None:
+            raise ValueError(
+                "hw_train_tables requires objective='train-latency'; "
+                "it would be silently ignored")
+        return _global_search_hw(
+            layer_paths, hw_space, strategy_space, dataflows, objective,
+            layer_backwards, train_weights, hw_tables, hw_train_tables)
+    if hw_tables is not None or hw_train_tables is not None:
+        raise ValueError("hw_tables / hw_train_tables require hw_space")
+
     all_parts = sorted({c for cs in strategy_space.values() for c in cs})
     train = None
     if objective == "train-latency":
@@ -167,37 +342,9 @@ def global_search(
             layer_paths, hw, all_parts, dataflows, simulate_fn, engine
         )
 
-    best_cost = float("inf")
-    best: tuple[str, tuple[LayerChoice, ...]] | None = None
-    for h, c_h in strategy_space.items():
-        choices: list[LayerChoice] = []
-        cost_h = 0.0
-        for l, paths in enumerate(layer_paths):
-            lat, arg = min(
-                ((table[(l, p, c, d)], (p, c, d))
-                 for p in range(len(paths))
-                 for c in c_h
-                 for d in dataflows),
-                key=lambda t: t[0],
-            )
-            p, c, d = arg
-            if train is not None:
-                w = train.weights
-                choices.append(LayerChoice(
-                    l, p, paths[p], c, d, lat,
-                    backward=train.bwd_choices[(l, c, d)],
-                    fwd_latency_s=w.fwd * train.fwd.seconds[(l, p, c, d)],
-                    bwd_latency_s=w.bwd * train.bwd_seconds[(l, c, d)],
-                    update_latency_s=w.update * train.update_seconds[l],
-                ))
-            else:
-                choices.append(LayerChoice(l, p, paths[p], c, d, lat))
-            cost_h += lat
-        if cost_h < best_cost:
-            best_cost = cost_h
-            best = (h, tuple(choices))
-    assert best is not None
-    return DSEResult(best[0], best[1], best_cost, table, objective)
+    strategy, choices, best_cost = _hierarchical_argmin(
+        layer_paths, table, strategy_space, dataflows, train)
+    return DSEResult(strategy, choices, best_cost, table, objective, hw=hw)
 
 
 def brute_force_search(
@@ -238,6 +385,7 @@ def explore_model(
     dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
     engine: str = "auto",
     objective: str = "latency",
+    hw_space: Sequence[HardwareConfig] | None = None,
 ) -> DSEResult:
     """End-to-end DSE for a model given per-layer tensor networks."""
     layer_paths = [find_topk_paths(tn, k=top_k) for tn in networks]
@@ -248,7 +396,7 @@ def explore_model(
         layer_backwards = memoised_layer_backwards(networks, k=top_k)
     return global_search(layer_paths, hw, strategy_space, dataflows,
                          engine=engine, objective=objective,
-                         layer_backwards=layer_backwards)
+                         layer_backwards=layer_backwards, hw_space=hw_space)
 
 
 def pareto_front(points: Sequence[tuple[float, float]]) -> list[int]:

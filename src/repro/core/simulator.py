@@ -2,9 +2,10 @@
 
 SCALE-Sim-style closed-form model of a parameterizable ``R x C`` systolic
 array with IS / OS / WS dataflows, double-buffered scratchpads and a DRAM
-bandwidth roof.  The same model drives both the paper-faithful FPGA target
-(32x32 PEs @ 200 MHz, INT8) and the TPU-v5e adaptation in
-``repro.core.tpu_cost``.
+bandwidth roof.  Every target is a ``repro.hw.HardwareConfig``: the
+paper-faithful FPGA setup (32x32 PEs @ 200 MHz, INT8), the TPU-v5e
+adaptation, and every candidate of the searched architecture space
+(``repro.hw.space``) all drive this one model.
 
 Per-GEMM latency = max(compute_cycles, dram_traffic / bandwidth): each GEMM
 is either pipeline-bound or memory-bound, which is exactly the asymmetry
@@ -26,6 +27,8 @@ from typing import Sequence
 
 import numpy as np
 
+from ..hw.config import HardwareConfig
+from ..hw.targets import FPGA_VU9P
 from .paths import CandidatePath
 from .tensor_network import GemmShape
 
@@ -48,33 +51,6 @@ STRATEGY_SPACE: dict[str, tuple[Partitioning, ...]] = {
     "monolithic": ((1, 1),),
     "split": ((1, 2), (2, 1)),
 }
-
-
-@dataclasses.dataclass(frozen=True)
-class HardwareConfig:
-    """Systolic target description.  Defaults = the paper's FPGA setup."""
-
-    name: str = "fpga_vu9p"
-    pe_rows: int = 32
-    pe_cols: int = 32
-    freq_hz: float = 200e6
-    sram_input_bytes: int = 3072 * 1024   # inputs + filters (paper 5.1)
-    sram_output_bytes: int = 1024 * 1024
-    dram_words_per_cycle: float = 256.0   # paper: "bandwidth of 256"
-    bytes_per_word: int = 1               # INT8
-    gemm_overhead_cycles: int = 64        # per-GEMM reconfig/drain constant
-
-    @property
-    def macs_per_cycle(self) -> int:
-        return self.pe_rows * self.pe_cols
-
-    @property
-    def peak_macs_per_s(self) -> float:
-        return self.macs_per_cycle * self.freq_hz
-
-
-# the paper's simulator settings (5.1) are the defaults above
-FPGA_VU9P = HardwareConfig()
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,49 +1,19 @@
-"""TPU-v5e re-parameterization of the systolic latency model.
+"""TPU-v5e target — compatibility shim over ``repro.hw.targets``.
 
-The paper's cost oracle is an FPGA systolic simulator; our deployment
-target is TPU v5e.  The MXU *is* a 128x128 systolic array, so the same
-closed-form model applies with TPU constants:
-
-  * peak 197 TFLOP/s bf16 per chip  ->  98.5e12 MAC/s
-  * on a 128x128 array that is an effective 6.01 GHz MAC issue rate
-    (the real chip reaches it with multiple MXU passes per clock; the
-    effective-frequency abstraction preserves the peak roofline)
-  * HBM 819 GB/s  ->  819e9 / 2 B (bf16) / 6.01e9 Hz ~= 68 words/cycle
-  * VMEM ~128 MiB split ~3:1 between operand and output buffering,
-    mirroring the paper's 3072/1024 KiB SRAM split.
-
-Dataflows map onto Pallas grid iteration orders (see
-``repro.kernels.tt_gemm``): the stationary operand is the block that stays
-VMEM-resident across consecutive grid steps.  The traffic asymmetry between
-IS/OS/WS is therefore identical in kind to the FPGA model — only the
-constants change.
+The TPU-v5e re-parameterization of the systolic latency model (and the
+roofline interconnect constants) moved to :mod:`repro.hw.targets`, the
+hardware-target registry.  This module re-exports them so existing
+imports (``repro.core.tpu_cost.TPU_V5E``) keep working; new code should
+use ``repro.hw.get_target("tpu_v5e")`` or ``repro.hw.TPU_V5E``.
 """
 
 from __future__ import annotations
 
-from .simulator import HardwareConfig
-
-_PEAK_FLOPS_BF16 = 197e12
-_MXU = 128
-_EFF_FREQ = (_PEAK_FLOPS_BF16 / 2.0) / (_MXU * _MXU)  # ~6.01e9
-_HBM_BYTES_PER_S = 819e9
-_BYTES_PER_WORD = 2  # bf16
-
-TPU_V5E = HardwareConfig(
-    name="tpu_v5e",
-    pe_rows=_MXU,
-    pe_cols=_MXU,
-    freq_hz=_EFF_FREQ,
-    sram_input_bytes=96 * 1024 * 1024,
-    sram_output_bytes=32 * 1024 * 1024,
-    dram_words_per_cycle=_HBM_BYTES_PER_S / _BYTES_PER_WORD / _EFF_FREQ,
-    bytes_per_word=_BYTES_PER_WORD,
-    gemm_overhead_cycles=256,  # kernel-dispatch / pipeline-warmup constant
+from ..hw.targets import (  # noqa: F401  (re-exports)
+    HBM_BYTES_PER_S,
+    HBM_CAPACITY_BYTES,
+    ICI_BYTES_PER_S_PER_LINK,
+    PEAK_FLOPS_BF16,
+    TPU_V5E,
+    VMEM_BYTES,
 )
-
-#: interconnect constants used by the roofline analysis (per chip)
-ICI_BYTES_PER_S_PER_LINK = 50e9
-HBM_BYTES_PER_S = _HBM_BYTES_PER_S
-PEAK_FLOPS_BF16 = _PEAK_FLOPS_BF16
-VMEM_BYTES = 128 * 1024 * 1024
-HBM_CAPACITY_BYTES = 16 * 1024**3

@@ -7,6 +7,8 @@ Runs the paper's Algorithm 1 for any named config in ``repro.configs``
     PYTHONPATH=src python -m repro.dse --arch tt-lm-100m
     PYTHONPATH=src python -m repro.dse --arch resnet18/cifar10 --hw tpu_v5e \
         --top-k 8 --objective edp --out report.json
+    PYTHONPATH=src python -m repro.dse --arch vit_ti4/cifar10 \
+        --hw-search budget --emit-plan plan.json   # joint arch co-search (v3)
 
 Pipeline: enumerate the model's tensorized projections as per-layer
 tensor networks -> MAC-guided top-K path search (memoised across the
@@ -30,20 +32,20 @@ from typing import Optional, Sequence
 from repro.configs import ARCH_IDS, get_config
 from repro.core import (
     ALL_PARTITIONINGS,
-    FPGA_VU9P,
-    TPU_V5E,
     TensorNetwork,
     build_cost_tables,
     find_topk_paths,
     global_search,
 )
 from repro.core.dse import build_cost_table
+from repro.hw import ArchSpace, get_target, list_targets
+from repro.hw import HW_TARGETS  # noqa: F401  (re-export; registry is repro.hw)
 from repro.models.config import ModelConfig
 from repro.nn.linear import LinearSpec
 
-HW_TARGETS = {FPGA_VU9P.name: FPGA_VU9P, TPU_V5E.name: TPU_V5E}
 OBJECTIVES = ("latency", "edp")
 MODES = ("infer", "train", "both")
+HW_SEARCH_MODES = ("off", "budget")
 
 #: vision workloads of the paper's Tables 1-4 (model_layers-backed)
 VISION_ARCHS = ("resnet18/cifar10", "resnet18/tiny_imagenet", "vit_ti4/cifar10")
@@ -148,6 +150,43 @@ def _vision_dse_layers(arch: str, tokens: int) -> list[tuple[str, TensorNetwork]
     return [(l.name, l.tt_network) for l in model_layers(model, dataset, batch=batch)]
 
 
+def dse_problems(
+    arch: str, tokens: Optional[int] = None, smoke: bool = False
+) -> tuple[list[tuple[str, TensorNetwork]], int]:
+    """Enumerate ``arch``'s per-layer DSE problems.
+
+    Returns ``(named_layers, tokens)`` — one (instance name, tensor
+    network) pair per tensorized projection instance, plus the effective
+    streamed-token count (1024 default; im2col batch 1 for vision archs).
+    """
+    if arch in VISION_ARCHS:
+        tokens = 1 if tokens is None else tokens
+        return _vision_dse_layers(arch, tokens), tokens
+    tokens = 1024 if tokens is None else tokens
+    try:
+        cfg = get_config(arch, smoke=smoke)
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch!r}; have ('tt-lm-100m',) + "
+            f"{tuple(ARCH_IDS)} + {VISION_ARCHS}"
+        ) from None
+    return model_dse_layers(cfg, tokens), tokens
+
+
+def model_layer_paths(
+    named: Sequence[tuple[str, TensorNetwork]], top_k: int
+) -> list:
+    """Stage 1: top-K path search, memoised over repeated layers."""
+    memo: dict = {}
+    out = []
+    for _, tn in named:
+        key = tuple((n.edges, n.dims, n.kind) for n in tn.nodes)
+        if key not in memo:
+            memo[key] = find_topk_paths(tn, k=top_k)
+        out.append(memo[key])
+    return out
+
+
 # ---------------------------------------------------------------------------
 # end-to-end run
 # ---------------------------------------------------------------------------
@@ -161,6 +200,8 @@ def run_dse(
     smoke: bool = False,
     engine: str = "vectorized",
     mode: str = "infer",
+    hw_search: str = "off",
+    hw_budget: Optional[int] = None,
 ) -> dict:
     """Run Algorithm 1 end-to-end; returns the JSON-serializable report.
 
@@ -171,21 +212,36 @@ def run_dse(
     per-layer reports carry the latency decomposition and the backward
     path choices); ``"both"`` runs both searches and nests their reports
     under ``"infer"`` / ``"train"`` with the layers whose choices diverge.
+
+    ``hw_search="budget"`` turns on the joint architecture co-search: the
+    ``--hw`` target becomes the *base* of a feasible architecture space
+    (``repro.hw.ArchSpace``, PE shape x SRAM split x bandwidth tier under
+    ``hw_budget`` MACs — default: the base target's own PE count), every
+    candidate is evaluated through the hw-batched cost-table engine, and
+    the report gains a per-candidate ``hw_search`` section.
     """
     if mode == "both":
         _check_train_compatible(objective, engine)  # fail before any search
         infer, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens, smoke,
-                                  engine, "infer")
+                                  engine, "infer", hw_search, hw_budget)
         train, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens, smoke,
-                                  engine, "train")
+                                  engine, "train", hw_search, hw_budget)
         return _both_report(infer, train)
     report, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens, smoke,
-                               engine, mode)
+                               engine, mode, hw_search, hw_budget)
     return report
 
 
 def _both_report(infer: dict, train: dict) -> dict:
-    """Combined infer+train report with the per-layer choice divergence."""
+    """Combined infer+train report with the per-layer choice divergence.
+
+    Under ``hw_search`` each mode co-searches its *own* architecture, so
+    the per-layer deltas may partly reflect the architecture change; the
+    top-level ``hw_search`` block names both winners and flags
+    ``hw_divergent`` so consumers can tell the two apart (an emitted plan
+    always embeds the train winner — plans are compiled from the train
+    leg).
+    """
     div = []
     train_by_name = {l["name"]: l for l in train["layers"]}
     for li in infer["layers"]:
@@ -199,7 +255,7 @@ def _both_report(infer: dict, train: dict) -> dict:
         }
         if delta:
             div.append({"name": li["name"], **delta})
-    return {
+    out = {
         "arch": infer["arch"],
         "hw": infer["hw"],
         "mode": "both",
@@ -209,6 +265,14 @@ def _both_report(infer: dict, train: dict) -> dict:
         "divergent_layers": div,
         "n_divergent_layers": len(div),
     }
+    hs_i, hs_t = infer.get("hw_search"), train.get("hw_search")
+    if hs_i is not None and hs_t is not None:
+        out["hw_search"] = {
+            "infer_chosen": hs_i["chosen"]["name"],
+            "train_chosen": hs_t["chosen"]["name"],
+            "hw_divergent": hs_i["chosen"]["name"] != hs_t["chosen"]["name"],
+        }
+    return out
 
 
 def run_dse_plan(
@@ -221,6 +285,8 @@ def run_dse_plan(
     engine: str = "vectorized",
     plan_backend: str = "auto",
     mode: str = "infer",
+    hw_search: str = "off",
+    hw_budget: Optional[int] = None,
 ):
     """Run the DSE and compile its result into an ExecutionPlan.
 
@@ -228,8 +294,11 @@ def run_dse_plan(
     the installable plan (``repro.plan.ExecutionPlan``).  This is the
     search->compile half of the deploy loop; ``launch/serve.py --plan``
     / ``launch/train.py --plan`` is the install->execute half.  Under
-    ``mode="train"`` (or ``"both"``) the emitted plan is schema v2 with
-    per-layer backward paths/backends/tilings.
+    ``mode="train"`` (or ``"both"``) the emitted plan is schema v2-style
+    with per-layer backward paths/backends/tilings.  Under
+    ``hw_search="budget"`` the plan embeds the co-searched winning
+    architecture (schema v3 ``hardware``) and its kernel tilings derive
+    from that architecture's array shape and buffer sizes.
     """
     from repro.plan import BACKENDS, compile_plan
 
@@ -243,12 +312,14 @@ def run_dse_plan(
     if mode == "both":
         _check_train_compatible(objective, engine)  # fail before any search
         infer_report, _, _, _ = _run_dse(
-            arch, hw, top_k, objective, tokens, smoke, engine, "infer")
+            arch, hw, top_k, objective, tokens, smoke, engine, "infer",
+            hw_search, hw_budget)
     plan_mode = "train" if mode in ("train", "both") else "infer"
-    report, named, res, hw_cfg = _run_dse(
-        arch, hw, top_k, objective, tokens, smoke, engine, plan_mode)
+    report, named, res, plan_hw = _run_dse(
+        arch, hw, top_k, objective, tokens, smoke, engine, plan_mode,
+        hw_search, hw_budget)
     plan = compile_plan(
-        named, res, hw_cfg,
+        named, res, plan_hw,
         arch=arch,
         objective=report["objective"],
         tokens=report["tokens"],
@@ -258,6 +329,33 @@ def run_dse_plan(
     if mode == "both":
         report = _both_report(infer_report, report)
     return report, plan
+
+
+def _hw_search_report(space: ArchSpace, res, base_cfg) -> dict:
+    """Per-candidate section of the report (sorted best-first)."""
+    def row(cand) -> dict:
+        return {
+            **space.describe(cand.hw),
+            "strategy": cand.strategy,
+            "total_latency_s": cand.total_latency_s,
+        }
+
+    by_latency = sorted(res.hw_candidates,
+                        key=lambda c: (c.total_latency_s, c.hw.name))
+    fixed = next((c for c in res.hw_candidates
+                  if c.hw.name == base_cfg.name), None)
+    chosen = next(c for c in res.hw_candidates if c.hw is res.hw)
+    return {
+        "mode": "budget",
+        "mac_budget": space.mac_budget,
+        "n_candidates": len(res.hw_candidates),
+        "chosen": row(chosen),
+        "fixed": row(fixed) if fixed is not None else None,
+        "improvement_pct": (
+            100.0 * (1.0 - chosen.total_latency_s / fixed.total_latency_s)
+            if fixed is not None and fixed.total_latency_s > 0 else None),
+        "candidates": [row(c) for c in by_latency],
+    }
 
 
 def _check_train_compatible(objective: str, engine: str) -> None:
@@ -281,10 +379,15 @@ def _run_dse(
     smoke: bool = False,
     engine: str = "vectorized",
     mode: str = "infer",
+    hw_search: str = "off",
+    hw_budget: Optional[int] = None,
 ):
-    """Shared pipeline; returns (report, named_layers, DSEResult, hw_cfg)."""
-    if hw not in HW_TARGETS:
-        raise KeyError(f"unknown hw {hw!r}; have {sorted(HW_TARGETS)}")
+    """Shared pipeline; returns (report, named_layers, DSEResult, hw_cfg).
+
+    The returned hardware config is the one the plan should compile for:
+    the co-searched winner under ``hw_search``, else the fixed target.
+    """
+    hw_cfg = get_target(hw)
     if objective not in OBJECTIVES:
         raise KeyError(f"unknown objective {objective!r}; have {OBJECTIVES}")
     if mode not in ("infer", "train"):
@@ -293,44 +396,69 @@ def _run_dse(
         raise ValueError("objective=edp requires the vectorized engine")
     if mode == "train":
         _check_train_compatible(objective, engine)
-    hw_cfg = HW_TARGETS[hw]
+    if hw_search not in HW_SEARCH_MODES:
+        raise KeyError(
+            f"unknown hw_search {hw_search!r}; have {HW_SEARCH_MODES}")
+    if hw_search != "off":
+        if objective != "latency":
+            raise ValueError(
+                "--hw-search optimizes the latency (or train-latency) "
+                "objective; --objective edp is fixed-architecture only")
+        if engine == "scalar":
+            raise ValueError("--hw-search requires the vectorized engine")
 
-    if arch in VISION_ARCHS:
-        tokens = 1 if tokens is None else tokens
-        named = _vision_dse_layers(arch, tokens)
-    else:
-        tokens = 1024 if tokens is None else tokens
-        try:
-            cfg = get_config(arch, smoke=smoke)
-        except KeyError:
-            raise KeyError(
-                f"unknown arch {arch!r}; have ('tt-lm-100m',) + "
-                f"{tuple(ARCH_IDS)} + {VISION_ARCHS}"
-            ) from None
-        named = model_dse_layers(cfg, tokens)
+    named, tokens = dse_problems(arch, tokens, smoke)
 
     # stage 1 — top-K path search, memoised over repeated layers
     t0 = time.perf_counter()
-    path_memo: dict = {}
-    layer_paths = []
-    for _, tn in named:
-        key = tuple((n.edges, n.dims, n.kind) for n in tn.nodes)
-        if key not in path_memo:
-            path_memo[key] = find_topk_paths(tn, k=top_k)
-        layer_paths.append(path_memo[key])
+    layer_paths = model_layer_paths(named, top_k)
     path_search_s = time.perf_counter() - t0
 
     # stage 2 — batched cost table (scalar engine kept for benchmarking)
     all_parts = ALL_PARTITIONINGS
     train_tables = None
+    layer_backwards = None
+    hw_search_report = None
     if mode == "train":
-        from repro.core import build_train_cost_tables, memoised_layer_backwards
+        from repro.core import memoised_layer_backwards
 
         t0 = time.perf_counter()
         layer_backwards = memoised_layer_backwards(
             [tn for _, tn in named], k=top_k)
         bwd_search_s = time.perf_counter() - t0
         path_search_s += bwd_search_s
+
+    if hw_search != "off":
+        # stage 2+3 joint: hw-batched tables + outer architecture loop
+        from repro.core import build_cost_tables_hw, build_train_cost_tables_hw
+
+        space = ArchSpace(base=hw_cfg, mac_budget=hw_budget)
+        cands = space.candidates()
+        if mode == "train":
+            trains = build_train_cost_tables_hw(
+                layer_paths, layer_backwards, cands, all_parts)
+            table_build_s = trains[0].build_seconds
+            t0 = time.perf_counter()
+            res = global_search(layer_paths, objective="train-latency",
+                                hw_space=cands, hw_train_tables=trains)
+            argmin_s = time.perf_counter() - t0
+            win = cands.index(res.hw)
+            train_tables = trains[win]
+            tables = train_tables.fwd
+        else:
+            per_hw = build_cost_tables_hw(layer_paths, cands, all_parts)
+            table_build_s = per_hw[0].build_seconds
+            t0 = time.perf_counter()
+            res = global_search(layer_paths, hw_space=cands,
+                                hw_tables=[t.seconds for t in per_hw])
+            argmin_s = time.perf_counter() - t0
+            win = cands.index(res.hw)
+            tables = per_hw[win]
+        seconds_table = tables.seconds
+        hw_search_report = _hw_search_report(space, res, hw_cfg)
+    elif mode == "train":
+        from repro.core import build_train_cost_tables
+
         train_tables = build_train_cost_tables(
             layer_paths, layer_backwards, hw_cfg, all_parts)
         tables = train_tables.fwd
@@ -351,13 +479,16 @@ def _run_dse(
         obj_table = tables.edp(hw_cfg) if objective == "edp" else seconds_table
 
     # stage 3 — hierarchical global argmin over the chosen objective
-    t0 = time.perf_counter()
-    if mode == "train":
-        res = global_search(layer_paths, hw_cfg, objective="train-latency",
-                            train_tables=train_tables)
-    else:
-        res = global_search(layer_paths, hw_cfg, table=obj_table)
-    argmin_s = time.perf_counter() - t0
+    # (already folded into the outer architecture loop under hw search)
+    if hw_search == "off":
+        t0 = time.perf_counter()
+        if mode == "train":
+            res = global_search(layer_paths, hw_cfg,
+                                objective="train-latency",
+                                train_tables=train_tables)
+        else:
+            res = global_search(layer_paths, hw_cfg, table=obj_table)
+        argmin_s = time.perf_counter() - t0
 
     layers = []
     total_latency = 0.0
@@ -390,6 +521,10 @@ def _run_dse(
     report = {
         "arch": arch,
         "hw": hw,
+        # the architecture the numbers below describe: the co-searched
+        # winner under --hw-search, else the --hw target itself
+        "hw_chosen": res.hw.name if res.hw is not None else hw,
+        "hw_search": hw_search_report,
         "mode": mode,
         "objective": "train-latency" if mode == "train" else objective,
         "top_k": top_k,
@@ -418,7 +553,7 @@ def _run_dse(
             c.bwd_latency_s for c in res.choices)
         report["total_update_latency_s"] = sum(
             c.update_latency_s for c in res.choices)
-    return report, named, res, hw_cfg
+    return report, named, res, (res.hw if res.hw is not None else hw_cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -431,7 +566,19 @@ def _build_parser() -> argparse.ArgumentParser:
         description="Global latency/EDP-driven DSE (paper Algorithm 1).",
     )
     p.add_argument("--arch", help="named config (see --list-archs)")
-    p.add_argument("--hw", default="fpga_vu9p", choices=sorted(HW_TARGETS))
+    p.add_argument("--hw", default="fpga_vu9p",
+                   help="hardware target name (see --list-hw; "
+                        "default fpga_vu9p)")
+    p.add_argument("--hw-search", default="off", choices=HW_SEARCH_MODES,
+                   help="off: fixed --hw target (default); budget: joint "
+                        "(architecture, path, dataflow) co-search over the "
+                        "feasible variants of --hw under a MAC/DSP budget "
+                        "(repro.hw.ArchSpace); the report gains a "
+                        "per-candidate hw_search section and --emit-plan "
+                        "embeds the winning architecture (plan v3)")
+    p.add_argument("--hw-budget", type=int, default=None, metavar="MACS",
+                   help="MAC/DSP budget for --hw-search budget "
+                        "(default: the base target's own PE count)")
     p.add_argument("--top-k", type=int, default=4, metavar="K",
                    help="candidate paths kept per layer (default 4)")
     p.add_argument("--objective", default="latency", choices=OBJECTIVES)
@@ -460,6 +607,8 @@ def _build_parser() -> argparse.ArgumentParser:
                         "plan (default: per-layer heuristic)")
     p.add_argument("--list-archs", action="store_true",
                    help="print supported --arch values and exit")
+    p.add_argument("--list-hw", action="store_true",
+                   help="print registered --hw targets and exit")
     return p
 
 
@@ -469,10 +618,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         for a in ("tt-lm-100m",) + tuple(ARCH_IDS) + VISION_ARCHS:
             print(a)
         return 0
+    if args.list_hw:
+        for name in list_targets():
+            print(name)
+        return 0
     if not args.arch:
         _build_parser().error("--arch is required (see --list-archs)")
     if args.plan_backend != "auto" and not args.emit_plan:
         _build_parser().error("--plan-backend requires --emit-plan")
+    if args.hw_budget is not None and args.hw_search == "off":
+        _build_parser().error("--hw-budget requires --hw-search budget")
     try:
         if args.emit_plan:
             report, plan = run_dse_plan(
@@ -485,11 +640,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 engine=args.engine,
                 plan_backend=args.plan_backend,
                 mode=args.mode,
+                hw_search=args.hw_search,
+                hw_budget=args.hw_budget,
             )
             plan.save(args.emit_plan)
             backends = sorted({lp.backend for lp in plan.layers})
+            hw_note = (f", hardware {plan.hardware.name}"
+                       if plan.hardware is not None else "")
             print(f"wrote plan {args.emit_plan} "
-                  f"({len(plan.layers)} layer plans, backends {backends})",
+                  f"({len(plan.layers)} layer plans, backends {backends}"
+                  f"{hw_note})",
                   file=sys.stderr)
         else:
             report = run_dse(
@@ -501,6 +661,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 smoke=args.smoke,
                 engine=args.engine,
                 mode=args.mode,
+                hw_search=args.hw_search,
+                hw_budget=args.hw_budget,
             )
     except (KeyError, ValueError) as e:
         msg = e.args[0] if e.args else e

@@ -1,0 +1,36 @@
+"""Hardware-architecture subsystem: targets, registry, searched space.
+
+Three layers:
+
+- :mod:`repro.hw.config` — :class:`HardwareConfig`, the single
+  parameterization of the closed-form systolic cost model (JSON-embeddable
+  since plan schema v3);
+- :mod:`repro.hw.targets` — the named-target registry (``fpga_vu9p``,
+  ``tpu_v5e``) behind ``python -m repro.dse --hw`` / ``--list-hw``;
+- :mod:`repro.hw.space` — :class:`ArchSpace`, the feasible architecture
+  variants of a target under a MAC/DSP budget, searched jointly with
+  contraction paths and dataflows by
+  ``repro.core.dse.global_search(hw_space=...)``.
+"""
+
+from .config import HardwareConfig
+from .targets import (
+    FPGA_VU9P,
+    HW_TARGETS,
+    TPU_V5E,
+    get_target,
+    list_targets,
+    register_target,
+)
+from .space import ArchSpace
+
+__all__ = [
+    "ArchSpace",
+    "FPGA_VU9P",
+    "HW_TARGETS",
+    "HardwareConfig",
+    "TPU_V5E",
+    "get_target",
+    "list_targets",
+    "register_target",
+]

@@ -60,6 +60,12 @@ def main() -> None:
         m = api(cfg, plan=plan)
         print(f"installed plan: arch={plan.arch} hw={plan.hw} "
               f"strategy={plan.strategy} ({len(plan.layers)} layer plans)")
+        if plan.hardware is not None:
+            h = plan.hardware
+            print(f"plan hardware: {h.name} ({h.pe_rows}x{h.pe_cols} PEs, "
+                  f"sram {h.sram_input_bytes // 1024}+"
+                  f"{h.sram_output_bytes // 1024} KiB, "
+                  f"bw {h.dram_words_per_cycle:g} words/cycle)")
     else:
         m = api(cfg)
 
@@ -114,6 +120,13 @@ def main() -> None:
             by_backend[r["backend"]] = by_backend.get(r["backend"], 0) + 1
         print(f"planned executions (trace-time): {len(log)} "
               f"by backend {dict(sorted(by_backend.items()))}")
+        tilings = sorted({
+            (r["tiling"]["block_m"], r["tiling"]["block_k"],
+             r["tiling"]["block_n"], r["tiling"]["block_tokens"])
+            for r in log})
+        if tilings:
+            print("kernel tilings (block_m,k,n,tokens): "
+                  + " ".join(str(t) for t in tilings))
         if not log:
             print(
                 f"WARNING: plan {args.plan} (arch={plan.arch!r}) matched no "

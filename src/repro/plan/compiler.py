@@ -14,8 +14,16 @@ blocks under one scanned trace.  The compiler therefore:
      path to the dataflow-configurable Pallas GEMM;
    - ``jnp`` when the layer's GEMMs are too small for kernel tiling to
      pay off (and always available as the reference fallback);
-3. derives the **tiling** from the path's dominant GEMM (power-of-two
-   blocks, MXU-aligned caps).
+3. derives the **tiling** from the path's dominant GEMM — and, for
+   *co-searched* results, from the winning architecture: ``block_m``/
+   ``block_n`` are capped by the searched array shape (R rows stream M,
+   C columns stream N), ``block_k`` by its longer side, and the
+   streaming backend's VMEM budget by the searched on-chip buffer
+   capacity, so a plan emitted under ``--hw-search`` tiles for the
+   architecture that won.  Fixed-target results keep the MXU-aligned
+   default caps: the cost-model target (e.g. the FPGA) is *not* the
+   execution substrate, and shrinking TPU Pallas blocks to an FPGA's
+   32x32 array would only multiply grid steps.
 
 Core partitioning (``1x2``/``2x1``) is an FPGA half-core construct with
 no TPU kernel realization; it is recorded verbatim for provenance and for
@@ -37,13 +45,26 @@ from repro.core.tensor_network import Node, TensorNetwork
 
 from .schema import BACKENDS, BackwardOp, ExecutionPlan, LayerPlan, Tiling
 
-#: conservative VMEM budget for the streaming backend (half a v5e core's
-#: 16 MiB VMEM, leaving headroom for double-buffering the token blocks)
+#: conservative VMEM ceiling for the streaming backend (half a v5e core's
+#: 16 MiB VMEM, leaving headroom for double-buffering the token blocks);
+#: the effective budget is the min of this and the plan architecture's
+#: on-chip buffer capacity (:func:`_streaming_budget`)
 VMEM_BUDGET_BYTES = 8 * 2**20
 
 #: below this many MACs in the dominant GEMM, kernel dispatch overhead
 #: dominates and the plan keeps the pure-jnp executor
 MIN_KERNEL_MACS = 1 << 16
+
+#: fallback tiling caps when no architecture is supplied (MXU-aligned)
+_DEFAULT_BLOCK_CAP = 128
+
+
+def _streaming_budget(hw: Optional[HardwareConfig]) -> int:
+    """VMEM budget for the streaming backend under ``hw``'s buffers."""
+    if hw is None:
+        return VMEM_BUDGET_BYTES
+    return min(VMEM_BUDGET_BYTES,
+               hw.sram_input_bytes + hw.sram_output_bytes)
 
 _INSTANCE_RE = re.compile(r"\[\d+\]$")
 
@@ -116,33 +137,50 @@ def streaming_fits(
     return _peak_live_elements(block, steps) * bytes_per_elem <= budget_bytes
 
 
-def _tiling_for_path(path: CandidatePath, tokens: int) -> Tiling:
-    """Blocks from the path's dominant (highest-MAC) GEMM."""
+def _tiling_for_path(
+    path: CandidatePath, tokens: int, hw: Optional[HardwareConfig] = None
+) -> Tiling:
+    """Blocks from the path's dominant (highest-MAC) GEMM, capped by the
+    architecture's array shape: R rows stream the M dimension, C columns
+    the N dimension, and the reduction tile by the longer side."""
+    cap_m = hw.pe_rows if hw is not None else _DEFAULT_BLOCK_CAP
+    cap_n = hw.pe_cols if hw is not None else _DEFAULT_BLOCK_CAP
+    cap_k = max(cap_m, cap_n)
     g = max(path.gemms, key=lambda g: g.macs)
     return Tiling(
-        block_m=max(8, _pow2_le(min(128, g.M))),
-        block_k=max(8, _pow2_le(min(128, g.K))),
-        block_n=max(8, _pow2_le(min(128, g.N))),
+        block_m=max(8, _pow2_le(min(cap_m, g.M))),
+        block_k=max(8, _pow2_le(min(cap_k, g.K))),
+        block_n=max(8, _pow2_le(min(cap_n, g.N))),
         block_tokens=max(8, _pow2_le(min(256, tokens))),
     )
 
 
-def _choose_tiling(choice: LayerChoice, tokens: int) -> Tiling:
-    return _tiling_for_path(choice.path, tokens)
+def _choose_tiling(
+    choice: LayerChoice, tokens: int, hw: Optional[HardwareConfig] = None
+) -> Tiling:
+    return _tiling_for_path(choice.path, tokens, hw)
 
 
 def _choose_backend(
-    tn: TensorNetwork, choice: LayerChoice, tiling: Tiling
+    tn: TensorNetwork,
+    choice: LayerChoice,
+    tiling: Tiling,
+    hw: Optional[HardwareConfig] = None,
 ) -> str:
     if max(g.macs for g in choice.path.gemms) < MIN_KERNEL_MACS:
         return "jnp"
-    if streaming_fits(tn, choice.path.steps, tiling.block_tokens):
+    if streaming_fits(tn, choice.path.steps, tiling.block_tokens,
+                      budget_bytes=_streaming_budget(hw)):
         return "streaming_tt"
     return "tt_gemm"
 
 
 def _choose_bwd_backend(
-    wrt: str, net: TensorNetwork, path: CandidatePath, tiling: Tiling
+    wrt: str,
+    net: TensorNetwork,
+    path: CandidatePath,
+    tiling: Tiling,
+    hw: Optional[HardwareConfig] = None,
 ) -> str:
     """Backend heuristic for one backward contraction.
 
@@ -152,13 +190,18 @@ def _choose_bwd_backend(
     """
     if max(g.macs for g in path.gemms) < MIN_KERNEL_MACS:
         return "jnp"
-    if wrt == "dx" and streaming_fits(net, path.steps, tiling.block_tokens):
+    if wrt == "dx" and streaming_fits(net, path.steps, tiling.block_tokens,
+                                      budget_bytes=_streaming_budget(hw)):
         return "streaming_tt"
     return "tt_gemm"
 
 
 def _compile_backward(
-    tn: TensorNetwork, choice: LayerChoice, tokens: int, backend: str
+    tn: TensorNetwork,
+    choice: LayerChoice,
+    tokens: int,
+    backend: str,
+    hw: Optional[HardwareConfig] = None,
 ) -> tuple[BackwardOp, ...]:
     """BackwardOps from a train-DSE choice (empty for inference results)."""
     if not choice.backward:
@@ -167,9 +210,9 @@ def _compile_backward(
     ops = []
     for ch in choice.backward:
         net = nets[ch.wrt]
-        tiling = _tiling_for_path(ch.path, tokens or batch_dim(tn))
+        tiling = _tiling_for_path(ch.path, tokens or batch_dim(tn), hw)
         if backend == "auto":
-            be = _choose_bwd_backend(ch.wrt, net, ch.path, tiling)
+            be = _choose_bwd_backend(ch.wrt, net, ch.path, tiling, hw)
         elif backend == "streaming_tt" and ch.wrt != "dx":
             be = "tt_gemm"  # weight grads cannot stream; closest kernel
         else:
@@ -302,13 +345,20 @@ def compile_plan(
 
     ``named_layers`` are the (instance_name, network) problems the search
     ran over, aligned with ``result.choices``.  ``backend`` forces every
-    layer onto one executor (``"auto"`` = per-layer heuristic).
+    layer onto one executor (``"auto"`` = per-layer heuristic).  ``hw``
+    is the architecture the result was evaluated on (pass ``result.hw``
+    after a co-search): it is embedded in the plan (schema v3), and for
+    co-searched results it also drives the kernel tiling caps and the
+    streaming-backend VMEM budget.
     """
     if backend != "auto" and backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; have {('auto',) + BACKENDS}")
     if len(named_layers) != len(result.choices):
         raise ValueError(
             f"{len(named_layers)} layers vs {len(result.choices)} choices")
+    # hw caps apply only when the architecture was actually searched;
+    # a fixed cost-model target says nothing about the execution device
+    tile_hw = hw if result.hw_candidates else None
 
     by_family: dict[str, LayerPlan] = {}
     counts: dict[str, int] = {}
@@ -327,8 +377,9 @@ def compile_plan(
                     f"instances of {name!r} received divergent DSE choices; "
                     "cannot collapse to one scanned layer plan")
             continue
-        tiling = _choose_tiling(choice, tokens or batch_dim(tn))
-        be = backend if backend != "auto" else _choose_backend(tn, choice, tiling)
+        tiling = _choose_tiling(choice, tokens or batch_dim(tn), tile_hw)
+        be = (backend if backend != "auto"
+              else _choose_backend(tn, choice, tiling, tile_hw))
         by_family[name] = LayerPlan(
             name=name,
             path_index=choice.path_index,
@@ -337,7 +388,7 @@ def compile_plan(
             partitioning=tuple(choice.partitioning),
             backend=be,
             tiling=tiling,
-            backward=_compile_backward(tn, choice, tokens, backend),
+            backward=_compile_backward(tn, choice, tokens, backend, tile_hw),
             macs=choice.path.macs,
             latency_s=choice.latency_s,
             bwd_latency_s=choice.bwd_latency_s,
@@ -356,4 +407,5 @@ def compile_plan(
         tokens=tokens,
         total_latency_s=(result.total_latency_s if total_latency_s is None
                          else total_latency_s),
+        hardware=hw,
     )

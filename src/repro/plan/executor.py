@@ -76,8 +76,16 @@ def record_execution(
     backend: Optional[str] = None,
     wrt: Optional[str] = None,
     path_steps=None,
+    tiling=None,
 ) -> None:
-    """Append one planned-execution record (called at trace time)."""
+    """Append one planned-execution record (called at trace time).
+
+    ``tiling`` defaults to the layer plan's forward tiling; backward
+    records pass the per-gradient op's.  Logging the blocks makes
+    "the kernel tilings follow the plan's (searched) architecture" an
+    assertable property, not an inference — the serve driver and
+    ``tests/test_hw.py`` both read it.
+    """
     rec = {
         "name": lp.name,
         "backend": backend if backend is not None else lp.backend,
@@ -86,6 +94,7 @@ def record_execution(
         "path_steps": lp.path_steps if path_steps is None else path_steps,
         "tokens": tokens,
         "phase": phase,
+        "tiling": (lp.tiling if tiling is None else tiling).to_json(),
     }
     if wrt is not None:
         rec["wrt"] = wrt
@@ -239,7 +248,8 @@ def _backward_planned(
     for wrt, net in backward_networks(tn):
         op = bwd_ops[wrt]
         record_execution(lp, tokens, phase="bwd", backend=op.backend,
-                         wrt=wrt, path_steps=op.path_steps)
+                         wrt=wrt, path_steps=op.path_steps,
+                         tiling=op.tiling)
         if wrt == "dx" and op.backend == "streaming_tt":
             bt = ops.clamp_block(op.tiling.block_tokens, tokens)
             net_block = grad_input_network(

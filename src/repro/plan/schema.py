@@ -26,13 +26,17 @@ import dataclasses
 import json
 from typing import Mapping, Optional, Sequence
 
+from repro.hw import HW_TARGETS, HardwareConfig
+
 #: current wire-format version.  v2 added per-layer *backward* entries
-#: (training-aware plans); v1 files are migrated on load — see
-#: :func:`migrate_plan_json`.
-PLAN_FORMAT_VERSION = 2
+#: (training-aware plans); v3 embeds the full hardware architecture the
+#: plan was searched for (``hardware`` — the co-searched winner under
+#: ``--hw-search``, else the named target).  Older files are migrated on
+#: load — see :func:`migrate_plan_json`.
+PLAN_FORMAT_VERSION = 3
 
 #: versions :func:`ExecutionPlan.from_json` accepts (older ones migrate up)
-SUPPORTED_VERSIONS = (1, 2)
+SUPPORTED_VERSIONS = (1, 2, 3)
 
 #: executor backends a layer plan may name
 BACKENDS = ("jnp", "tt_gemm", "streaming_tt")
@@ -227,6 +231,10 @@ class ExecutionPlan:
     strategy: str = ""
     tokens: int = 0
     total_latency_s: float = 0.0
+    #: v3: the full architecture the plan was searched for — the
+    #: co-searched winner under ``--hw-search``, else the named target.
+    #: ``None`` only for migrated plans whose ``hw`` name is unregistered.
+    hardware: Optional[HardwareConfig] = None
     version: int = PLAN_FORMAT_VERSION
 
     def __post_init__(self) -> None:
@@ -234,6 +242,11 @@ class ExecutionPlan:
         if len(set(names)) != len(names):
             dup = sorted({n for n in names if names.count(n) > 1})
             raise ValueError(f"duplicate layer plans for {dup}")
+        if self.hardware is not None and not isinstance(self.hardware,
+                                                        HardwareConfig):
+            raise ValueError(
+                f"hardware must be a repro.hw.HardwareConfig, "
+                f"got {type(self.hardware).__name__}")
 
     def layer(self, name: str) -> Optional[LayerPlan]:
         for lp in self.layers:
@@ -259,6 +272,8 @@ class ExecutionPlan:
             "version": self.version,
             "arch": self.arch,
             "hw": self.hw,
+            "hardware": (self.hardware.to_json()
+                         if self.hardware is not None else None),
             "objective": self.objective,
             "strategy": self.strategy,
             "tokens": self.tokens,
@@ -277,6 +292,7 @@ class ExecutionPlan:
                 f"plan format version {version} unsupported "
                 f"(this build reads versions {SUPPORTED_VERSIONS})")
         d = migrate_plan_json(d)
+        hardware = d.get("hardware")
         return cls(
             layers=tuple(LayerPlan.from_json(l) for l in d["layers"]),
             arch=str(d.get("arch", "")),
@@ -285,6 +301,8 @@ class ExecutionPlan:
             strategy=str(d.get("strategy", "")),
             tokens=int(d.get("tokens", 0)),
             total_latency_s=float(d.get("total_latency_s", 0.0)),
+            hardware=(HardwareConfig.from_json(hardware)
+                      if hardware is not None else None),
             version=PLAN_FORMAT_VERSION,
         )
 
@@ -306,9 +324,13 @@ def migrate_plan_json(d: Mapping) -> dict:
 
     v1 -> v2: layers gain an empty ``backward`` list (and zero
     ``bwd_latency_s`` provenance) — a v1 plan is an inference-only v2
-    plan.  The migration is deterministic, so
-    ``loads(v1).dumps()`` -> ``loads(...)`` -> ``dumps()`` is bit-stable
-    (the round-trip property ``tests/test_plan.py`` asserts).
+    plan.  v2 -> v3: the plan gains a ``hardware`` object resolved from
+    its ``hw`` target name through the ``repro.hw`` registry (``null``
+    when the name is unregistered — the plan still installs; only the
+    embedded-architecture provenance is missing).  Each migration is
+    deterministic, so ``loads(old).dumps()`` -> ``loads(...)`` ->
+    ``dumps()`` is bit-stable (the round-trip property
+    ``tests/test_plan.py`` asserts).
     """
     version = int(d.get("version", -1))
     if version == PLAN_FORMAT_VERSION:
@@ -321,6 +343,13 @@ def migrate_plan_json(d: Mapping) -> dict:
              "bwd_latency_s": layer.get("bwd_latency_s", 0.0)}
             for layer in d["layers"]
         ]
+        return migrate_plan_json(out)
+    if version == 2:
+        out = dict(d)
+        out["version"] = 3
+        if out.get("hardware") is None:
+            target = HW_TARGETS.get(str(d.get("hw", "")))
+            out["hardware"] = target.to_json() if target is not None else None
         return out
     raise ValueError(f"cannot migrate plan version {version}")
 

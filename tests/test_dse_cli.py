@@ -60,8 +60,87 @@ def test_tpu_target_and_vision_arch():
 def test_unknown_arch_and_hw_raise():
     with pytest.raises(KeyError):
         run_dse("no-such-model")
-    with pytest.raises(KeyError):
+    # unknown --hw lists the registered choices in the error
+    with pytest.raises(KeyError, match="fpga_vu9p"):
         run_dse("tt-lm-100m", hw="no-such-hw")
+
+
+def test_list_hw_flag(capsys):
+    assert main(["--list-hw"]) == 0
+    out = capsys.readouterr().out.split()
+    assert "fpga_vu9p" in out and "tpu_v5e" in out
+
+
+def test_hw_search_report_and_guarantee():
+    """--hw-search budget: >= 64 feasible candidates, co-searched optimum
+    <= the fixed-target optimum, per-candidate rows sorted best-first."""
+    r = run_dse("vit_ti4/cifar10", top_k=2, hw_search="budget")
+    hs = r["hw_search"]
+    assert hs["mode"] == "budget" and hs["n_candidates"] >= 64
+    assert len(hs["candidates"]) == hs["n_candidates"]
+    lats = [c["total_latency_s"] for c in hs["candidates"]]
+    assert lats == sorted(lats)
+    assert hs["chosen"]["total_latency_s"] == lats[0]
+    assert hs["chosen"]["total_latency_s"] <= hs["fixed"]["total_latency_s"]
+    assert r["total_latency_s"] == pytest.approx(
+        hs["chosen"]["total_latency_s"], rel=1e-12)
+    # the top-level label names the architecture the numbers describe
+    assert r["hw_chosen"] == hs["chosen"]["name"]
+    assert r["hw"] == "fpga_vu9p"  # the requested base target, unchanged
+    # fixed-target run agrees with the space's row for the base target
+    fixed = run_dse("vit_ti4/cifar10", top_k=2)
+    assert fixed["hw_search"] is None
+    assert fixed["total_latency_s"] == hs["fixed"]["total_latency_s"]
+
+
+def test_hw_search_emit_plan_v3_tilings():
+    """--hw-search --emit-plan embeds the winning architecture and caps
+    the kernel tilings by its array shape."""
+    from repro.dse_cli import run_dse_plan
+
+    report, plan = run_dse_plan("tt-lm-100m", smoke=True, top_k=2,
+                                tokens=32, hw_search="budget")
+    assert plan.version == 3
+    assert plan.hardware is not None
+    assert plan.hardware.name == report["hw_search"]["chosen"]["name"]
+    assert plan.hw == plan.hardware.name
+    for lp in plan.layers:
+        assert lp.tiling.block_m <= max(8, plan.hardware.pe_rows)
+        assert lp.tiling.block_n <= max(8, plan.hardware.pe_cols)
+        assert lp.tiling.block_k <= max(
+            8, plan.hardware.pe_rows, plan.hardware.pe_cols)
+
+
+def test_fixed_target_plan_keeps_default_tiling_caps():
+    """Without --hw-search the cost-model target must NOT shrink the
+    Pallas tiling caps: the FPGA model is not the execution substrate,
+    and pre-existing fixed-target plans tiled for the 128-wide MXU."""
+    from repro.dse_cli import run_dse_plan
+
+    _, plan = run_dse_plan("tt-lm-100m", smoke=True, top_k=2, tokens=32)
+    assert plan.hardware is not None and plan.hardware.pe_rows == 32
+    caps = {max(lp.tiling.block_m, lp.tiling.block_k, lp.tiling.block_n)
+            for lp in plan.layers}
+    assert max(caps) > 32  # FPGA's 32x32 array did not cap the blocks
+
+
+def test_hw_search_mode_both_flags_arch_divergence():
+    """Each leg of --mode both co-searches its own architecture; the
+    combined report names both winners and flags when they differ."""
+    r = run_dse("vit_ti4/cifar10", top_k=2, mode="both", hw_search="budget")
+    hs = r["hw_search"]
+    assert hs["infer_chosen"] == r["infer"]["hw_search"]["chosen"]["name"]
+    assert hs["train_chosen"] == r["train"]["hw_search"]["chosen"]["name"]
+    assert hs["hw_divergent"] == (hs["infer_chosen"] != hs["train_chosen"])
+
+
+def test_hw_search_validation():
+    with pytest.raises(KeyError, match="hw_search"):
+        run_dse("tt-lm-100m", hw_search="exhaustive")
+    with pytest.raises(ValueError, match="edp"):
+        run_dse("tt-lm-100m", hw_search="budget", objective="edp")
+    with pytest.raises(ValueError, match="vectorized"):
+        run_dse("tt-lm-100m", hw_search="budget", engine="scalar")
 
 
 def test_model_dse_layers_covers_families():
@@ -75,8 +154,8 @@ def test_model_dse_layers_covers_families():
 
 
 def test_mode_train_report_and_plan():
-    """--mode train: decomposed per-layer latencies + a v2 plan with
-    backward entries."""
+    """--mode train: decomposed per-layer latencies + a train-aware plan
+    with backward entries."""
     from repro.dse_cli import run_dse_plan
 
     report, plan = run_dse_plan("tt-lm-100m", smoke=True, top_k=2, tokens=32,
@@ -92,7 +171,7 @@ def test_mode_train_report_and_plan():
     assert report["total_latency_s"] == pytest.approx(
         report["total_fwd_latency_s"] + report["total_bwd_latency_s"]
         + report["total_update_latency_s"], rel=1e-12)
-    assert plan.version == 2
+    assert plan.version == 3
     assert all(lp.backward for lp in plan.layers)
     assert plan.objective == "train-latency"
 

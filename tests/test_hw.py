@@ -1,0 +1,251 @@
+"""The hardware axis: registry, architecture space, hw-batched tables,
+joint (arch, path, dataflow) co-search.
+
+Acceptance bars: (1) the hw-batched cost-table engine is *bit-identical*
+to the scalar ``simulate()`` oracle for every candidate; (2) every
+candidate the space generates is resource-feasible and the base target
+is candidate 0; (3) the co-searched optimum is <= every fixed-
+architecture optimum, for every registered target and for both the
+latency and train-latency objectives.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (
+    ALL_PARTITIONINGS,
+    build_cost_tables_hw,
+    build_train_cost_tables,
+    build_train_cost_tables_hw,
+    find_topk_paths,
+    global_search,
+    memoised_layer_backwards,
+    tt_linear_network,
+)
+from repro.core.dse import build_cost_table
+from repro.hw import (
+    ArchSpace,
+    FPGA_VU9P,
+    HW_TARGETS,
+    HardwareConfig,
+    TPU_V5E,
+    get_target,
+    list_targets,
+    register_target,
+)
+
+
+def _layer_paths():
+    return [
+        find_topk_paths(tt_linear_network(64, (2, 8), (8, 2), (4, 4, 4)), k=4),
+        find_topk_paths(tt_linear_network(4, (4, 4), (4, 4), (4, 4, 4)), k=3),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_resolves_named_targets():
+    assert get_target("fpga_vu9p") is FPGA_VU9P
+    assert get_target("tpu_v5e") is TPU_V5E
+    assert set(list_targets()) >= {"fpga_vu9p", "tpu_v5e"}
+    assert HW_TARGETS["fpga_vu9p"] is FPGA_VU9P
+
+
+def test_registry_unknown_name_lists_choices():
+    with pytest.raises(KeyError, match="fpga_vu9p"):
+        get_target("no-such-hw")
+
+
+def test_register_target_rejects_conflicting_redefinition():
+    register_target(FPGA_VU9P)  # identical re-registration is fine
+    clash = dataclasses.replace(FPGA_VU9P, pe_rows=64)
+    with pytest.raises(ValueError, match="already registered"):
+        register_target(clash)
+
+
+def test_hardware_config_json_roundtrip():
+    for hw in (FPGA_VU9P, TPU_V5E):
+        assert HardwareConfig.from_json(hw.to_json()) == hw
+
+
+# ---------------------------------------------------------------------------
+# architecture space
+# ---------------------------------------------------------------------------
+
+def test_space_base_first_and_large_enough():
+    space = ArchSpace(base=FPGA_VU9P)
+    cands = space.candidates()
+    assert cands[0] is FPGA_VU9P          # ties resolve to the default
+    assert len(cands) >= 64               # the acceptance floor
+
+
+@pytest.mark.parametrize("base", [FPGA_VU9P, TPU_V5E])
+def test_space_candidates_all_feasible(base):
+    space = ArchSpace(base=base)
+    cands = space.candidates()
+    names = [c.name for c in cands]
+    assert len(set(names)) == len(names)
+    for hw in cands:
+        assert space.feasibility(hw) == [], hw.name
+        assert hw.pe_rows * hw.pe_cols <= space.mac_budget
+        assert hw.pe_rows * hw.pe_cols >= (
+            space.min_budget_util * space.mac_budget)
+        assert (hw.sram_input_bytes + hw.sram_output_bytes
+                <= space.sram_total_bytes)
+        assert hw.dram_words_per_cycle <= base.dram_words_per_cycle
+        # process/board constants are inherited, not searched
+        assert hw.freq_hz == base.freq_hz
+        assert hw.bytes_per_word == base.bytes_per_word
+
+
+def test_space_no_duplicate_parameterizations():
+    cands = ArchSpace(base=FPGA_VU9P).candidates()
+    seen = {dataclasses.astuple(dataclasses.replace(c, name=""))
+            for c in cands}
+    assert len(seen) == len(cands)
+
+
+def test_space_feasibility_reports_problems():
+    space = ArchSpace(base=FPGA_VU9P)
+    too_big = dataclasses.replace(FPGA_VU9P, pe_rows=64, pe_cols=64)
+    assert any("budget" in p for p in space.feasibility(too_big))
+    skewed = dataclasses.replace(FPGA_VU9P, pe_rows=512, pe_cols=2)
+    assert space.feasibility(skewed)  # aspect + dim bounds
+    greedy_bw = dataclasses.replace(FPGA_VU9P, dram_words_per_cycle=1024.0)
+    assert any("bandwidth" in p for p in space.feasibility(greedy_bw))
+
+
+def test_space_rejects_impossible_budget():
+    with pytest.raises(ValueError, match="budget"):
+        ArchSpace(base=FPGA_VU9P, mac_budget=16)
+
+
+def test_space_rejects_overclocked_bw_tiers():
+    with pytest.raises(ValueError, match="bandwidth"):
+        ArchSpace(base=FPGA_VU9P, bw_tiers=(512.0,))
+
+
+def test_space_keeps_base_under_enlarged_budget():
+    """A budget that makes the base's PE count fall below the utilization
+    preference must NOT drop the base from its own space — it is the
+    reference point of the <= guarantee and of the report's fixed row."""
+    space = ArchSpace(base=FPGA_VU9P, mac_budget=4096)
+    cands = space.candidates()
+    assert cands[0] is FPGA_VU9P
+    assert space.resource_problems(FPGA_VU9P) == []
+    # ... even though the full preference check would prune it
+    assert any("waste" in p for p in space.feasibility(FPGA_VU9P))
+    lp = _layer_paths()
+    co = global_search(lp, hw_space=cands)
+    fixed = global_search(lp, FPGA_VU9P)
+    assert co.total_latency_s <= fixed.total_latency_s
+
+
+# ---------------------------------------------------------------------------
+# hw-batched cost tables vs the scalar oracle
+# ---------------------------------------------------------------------------
+
+def test_hw_batched_tables_bit_identical_to_scalar_oracle():
+    """Brute-force equality on a tiny space: every candidate's table must
+    compare equal with ``==`` (no tolerance) to its per-cell scalar
+    sweep."""
+    lp = _layer_paths()
+    cands = ArchSpace(base=FPGA_VU9P).candidates()[:5] + (TPU_V5E,)
+    tables = build_cost_tables_hw(lp, cands, ALL_PARTITIONINGS)
+    assert len(tables) == len(cands)
+    for hw, t in zip(cands, tables):
+        scalar = build_cost_table(lp, hw, ALL_PARTITIONINGS, engine="scalar")
+        assert t.seconds == scalar, hw.name  # dict equality => bit-identical
+
+
+def test_hw_batched_train_tables_match_single_hw_build():
+    nets = [tt_linear_network(32, (4, 4), (4, 4), (4, 4, 4))]
+    lp = [find_topk_paths(tn, k=3) for tn in nets]
+    lbs = memoised_layer_backwards(nets, k=3)
+    cands = (FPGA_VU9P,
+             dataclasses.replace(FPGA_VU9P, name="half", pe_rows=16,
+                                 pe_cols=64, dram_words_per_cycle=64.0))
+    batched = build_train_cost_tables_hw(lp, lbs, cands)
+    for hw, got in zip(cands, batched):
+        ref = build_train_cost_tables(lp, lbs, hw)
+        assert got.train_seconds() == ref.train_seconds()
+        assert got.bwd_seconds == ref.bwd_seconds
+        assert got.update_seconds == ref.update_seconds
+
+
+# ---------------------------------------------------------------------------
+# joint co-search
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(HW_TARGETS))
+def test_cosearch_beats_every_fixed_arch(name):
+    """The co-searched optimum is <= every fixed-architecture optimum
+    over the candidate space (exhaustive outer loop)."""
+    base = get_target(name)
+    lp = _layer_paths()
+    cands = ArchSpace(base=base).candidates()
+    co = global_search(lp, hw_space=cands)
+    assert co.hw in cands
+    assert len(co.hw_candidates) == len(cands)
+    for cand in co.hw_candidates:
+        fixed = global_search(lp, cand.hw)
+        assert fixed.total_latency_s == cand.total_latency_s
+        assert co.total_latency_s <= cand.total_latency_s
+    # the winner's recorded latency is the returned optimum
+    chosen = next(c for c in co.hw_candidates if c.hw is co.hw)
+    assert chosen.total_latency_s == co.total_latency_s
+
+
+def test_cosearch_train_objective():
+    nets = [tt_linear_network(32, (4, 4), (4, 4), (4, 4, 4))]
+    lp = [find_topk_paths(tn, k=3) for tn in nets]
+    lbs = memoised_layer_backwards(nets, k=3)
+    cands = ArchSpace(base=FPGA_VU9P).candidates()[:12]
+    fixed = global_search(lp, FPGA_VU9P, objective="train-latency",
+                          layer_backwards=lbs)
+    co = global_search(lp, objective="train-latency", layer_backwards=lbs,
+                       hw_space=cands)
+    assert co.objective == "train-latency"
+    assert co.total_latency_s <= fixed.total_latency_s
+    assert all(c.backward for c in co.choices)
+
+
+def test_cosearch_tie_resolves_to_base():
+    """A space of identical-cost candidates picks the first (the base)."""
+    lp = _layer_paths()
+    clone = dataclasses.replace(FPGA_VU9P, name="clone")
+    co = global_search(lp, hw_space=(FPGA_VU9P, clone))
+    assert co.hw is FPGA_VU9P
+
+
+def test_cosearch_validation_errors():
+    lp = _layer_paths()
+    cands = (FPGA_VU9P,)
+    with pytest.raises(ValueError, match="hw_space"):
+        global_search(lp, table={}, hw_space=cands)
+    with pytest.raises(ValueError, match="scalar"):
+        global_search(lp, engine="scalar", hw_space=cands)
+    with pytest.raises(ValueError, match="hw_space"):
+        global_search(lp, hw_tables=[{}])
+    with pytest.raises(ValueError, match="layer_backwards"):
+        global_search(lp, objective="train-latency", hw_space=cands)
+    with pytest.raises(ValueError, match="candidates"):
+        global_search(lp, hw_space=cands, hw_tables=[{}, {}])
+    with pytest.raises(ValueError, match="at least one"):
+        global_search(lp, hw_space=())
+    # cross-objective table arguments fail loudly, never silently ignored
+    with pytest.raises(ValueError, match="hw_train_tables"):
+        global_search(lp, objective="train-latency", hw_space=cands,
+                      hw_tables=[{}])
+    with pytest.raises(ValueError, match="train-latency"):
+        global_search(lp, hw_space=cands, hw_train_tables=[object()])
+
+
+def test_fixed_search_records_its_architecture():
+    lp = _layer_paths()
+    res = global_search(lp, TPU_V5E)
+    assert res.hw is TPU_V5E
+    assert res.hw_candidates == ()

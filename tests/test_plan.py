@@ -80,12 +80,14 @@ def test_plan_roundtrip_bit_equal(tmp_path):
     assert loaded.dumps() == text
 
 
-def test_v1_plan_migrates_to_v2_bit_equal(tmp_path):
-    """A v1 plan (no ``backward`` entries) loads, upgrades to v2, and the
-    migrated serialization round-trips byte-identically."""
+def test_v1_plan_migrates_to_current_bit_equal(tmp_path):
+    """A v1 plan (no ``backward`` entries, no ``hardware``) loads,
+    upgrades through every migration, and the migrated serialization
+    round-trips byte-identically."""
     _, _, _, plan = _unit_problem()
     d = plan.to_json()
     d["version"] = 1
+    d.pop("hardware")
     for layer in d["layers"]:
         layer.pop("backward")
         layer.pop("bwd_latency_s")
@@ -94,19 +96,63 @@ def test_v1_plan_migrates_to_v2_bit_equal(tmp_path):
     migrated = ExecutionPlan.loads(v1_text)
     from repro.plan import PLAN_FORMAT_VERSION
 
-    assert migrated.version == PLAN_FORMAT_VERSION == 2
+    assert migrated.version == PLAN_FORMAT_VERSION == 3
     assert all(lp.backward == () for lp in migrated.layers)
-    # everything but the version/backward fields survives untouched
+    # everything but the version/backward/hardware fields survives untouched
     assert migrated.names == plan.names
     assert [lp.path_steps for lp in migrated.layers] == [
         lp.path_steps for lp in plan.layers]
 
-    v2_text = migrated.dumps()
-    assert ExecutionPlan.loads(v2_text).dumps() == v2_text  # bit-equal
+    text = migrated.dumps()
+    assert ExecutionPlan.loads(text).dumps() == text  # bit-equal
     # migration is idempotent at the JSON level too
     from repro.plan import migrate_plan_json
 
-    assert migrate_plan_json(json.loads(v2_text)) == json.loads(v2_text)
+    assert migrate_plan_json(json.loads(text)) == json.loads(text)
+
+
+def test_v2_plan_migrates_to_v3_with_registry_hardware():
+    """v2 -> v3 resolves ``hardware`` from the ``hw`` name through the
+    repro.hw registry; unregistered names migrate with hardware=None.
+    Either way the migrated serialization is bit-stable."""
+    from repro.hw import get_target
+    from repro.plan import migrate_plan_json
+
+    _, _, _, plan = _unit_problem()
+    d = plan.to_json()
+    d["version"] = 2
+    d.pop("hardware")
+    v2_text = json.dumps(d, indent=2, sort_keys=True) + "\n"
+
+    migrated = ExecutionPlan.loads(v2_text)
+    assert migrated.version == 3
+    assert migrated.hardware == get_target("fpga_vu9p")
+    text = migrated.dumps()
+    assert ExecutionPlan.loads(text).dumps() == text
+    assert migrate_plan_json(json.loads(text)) == json.loads(text)
+
+    # unregistered hw name: plan still loads, provenance is just absent
+    d["hw"] = "asic_rev_b"
+    orphan = ExecutionPlan.from_json(json.loads(json.dumps(d)))
+    assert orphan.hardware is None
+    assert ExecutionPlan.loads(orphan.dumps()).dumps() == orphan.dumps()
+
+
+def test_v3_plan_embeds_searched_hardware():
+    """A freshly compiled plan embeds the architecture it was compiled
+    for, and the embedded config survives the canonical round-trip."""
+    from repro.hw import FPGA_VU9P as BASE
+
+    _, _, _, plan = _unit_problem()
+    assert plan.version == 3
+    assert plan.hardware == BASE
+    again = ExecutionPlan.loads(plan.dumps())
+    assert again.hardware == plan.hardware
+    # non-HardwareConfig payloads are rejected at construction
+    import dataclasses
+
+    with pytest.raises(ValueError, match="hardware"):
+        dataclasses.replace(plan, hardware={"pe_rows": 32})
 
 
 def test_train_plan_backward_ops_roundtrip():
