@@ -18,6 +18,7 @@ from . import (
     bench_dse,
     bench_dse_overhead,
     bench_plan_exec,
+    bench_serve_wallclock,
     fig3_paths,
     fig5_dataflow,
     table1_compression,
@@ -40,6 +41,7 @@ SUITES = {
     "dse_overhead": bench_dse_overhead.run,
     "plan_exec": bench_plan_exec.run,
     "bench_dse": bench_dse.run,
+    "bench_serve": bench_serve_wallclock.run,
 }
 
 

@@ -53,6 +53,7 @@ from .dse import (
     DSEResult,
     HwCandidateResult,
     LayerChoice,
+    apply_calibration,
     brute_force_search,
     build_cost_table,
     explore_model,
@@ -76,8 +77,8 @@ __all__ = [
     "BackwardProblem", "LayerBackward", "TrainCostWeights",
     "backward_networks", "grad_core_network", "grad_input_network",
     "layer_backward", "memoised_layer_backwards", "update_seconds",
-    "DSEResult", "HwCandidateResult", "LayerChoice", "brute_force_search",
-    "explore_model", "global_search", "pareto_front",
+    "DSEResult", "HwCandidateResult", "LayerChoice", "apply_calibration",
+    "brute_force_search", "explore_model", "global_search", "pareto_front",
     "TTMatrix", "reconstruction_error", "tt_rand", "tt_svd",
     "core_tensors", "execute_path",
 ]

@@ -237,6 +237,44 @@ def _global_search_hw(
                      hw=hw_space[i], hw_candidates=tuple(candidates))
 
 
+def _normalize_calibration(
+    calibration: Mapping, dataflows: Sequence[Dataflow]
+) -> dict[Dataflow, float]:
+    """Key a measured-latency calibration table by :class:`Dataflow`."""
+    out: dict[Dataflow, float] = {}
+    for k, v in calibration.items():
+        d = k if isinstance(k, Dataflow) else Dataflow(str(k))
+        s = float(v)
+        if not s > 0:
+            raise ValueError(
+                f"calibration scale for {d.value} must be positive, got {v!r}")
+        out[d] = s
+    unknown = set(out) - set(dataflows)
+    if unknown:
+        raise ValueError(
+            f"calibration names dataflows outside the search space: "
+            f"{sorted(d.value for d in unknown)}")
+    return out
+
+
+def apply_calibration(
+    table: Mapping[tuple[int, int, Partitioning, Dataflow], float],
+    calibration: Mapping,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+) -> dict[tuple[int, int, Partitioning, Dataflow], float]:
+    """Rescale a cost table per dataflow by measured/analytic factors.
+
+    ``calibration`` maps dataflow (``Dataflow`` or its string value) to a
+    positive scale — typically ``repro.tune.measured_calibration``'s
+    geometric-mean measured/analytic ratio per dataflow.  A uniform table
+    cannot move any argmin; *relative* per-dataflow disagreement between
+    the analytic model and the machine can, which is exactly the signal
+    wall-clock measurements carry.
+    """
+    cal = _normalize_calibration(calibration, dataflows)
+    return {k: v * cal.get(k[3], 1.0) for k, v in table.items()}
+
+
 def global_search(
     layer_paths: Sequence[Sequence[CandidatePath]],
     hw: HardwareConfig = FPGA_VU9P,
@@ -253,12 +291,22 @@ def global_search(
     hw_space: Sequence[HardwareConfig] | None = None,
     hw_tables: Sequence[Mapping] | None = None,
     hw_train_tables: Sequence | None = None,
+    calibration: Mapping | None = None,
 ) -> DSEResult:
     """Algorithm 1: global strategy loop + independent per-layer argmins.
 
     ``table`` may supply a pre-built cost table (any per-config objective,
     e.g. the EDP table from ``cost_table.CostTables.edp``); by default the
     latency table is built with the selected ``engine``.
+
+    ``calibration`` rescales the (built or supplied) cost table per
+    dataflow by measured/analytic factors (:func:`apply_calibration`)
+    before the argmin — the measured-latency feedback loop of
+    ``repro.tune``: when wall-clock measurements rank dataflows
+    differently than the analytic model, the argmin genuinely moves.
+    Supported for fixed-target inference searches; the training
+    decomposition and the architecture co-search are still analytic-only
+    (open items in ROADMAP.md).
 
     ``objective="train-latency"`` jointly optimizes the forward *and*
     backward passes: per cell, the cost is ``w_f * fwd + w_b * bwd +
@@ -281,6 +329,16 @@ def global_search(
         raise ValueError(
             f"unknown objective {objective!r}; have ('latency', 'train-latency')"
             " — EDP goes through the ``table`` argument")
+    if calibration is not None:
+        if hw_space is not None:
+            raise ValueError(
+                "calibration composes with fixed-target searches only; "
+                "per-candidate measured calibration of an architecture "
+                "co-search is an open item (ROADMAP.md)")
+        if objective == "train-latency":
+            raise ValueError(
+                "calibration rescales the inference table; the training "
+                "decomposition is analytic-only for now (ROADMAP.md)")
     if hw_space is not None:
         if table is not None or train_tables is not None:
             raise ValueError(
@@ -341,6 +399,8 @@ def global_search(
         table = build_cost_table(
             layer_paths, hw, all_parts, dataflows, simulate_fn, engine
         )
+    if calibration is not None:
+        table = apply_calibration(table, calibration, dataflows)
 
     strategy, choices, best_cost = _hierarchical_argmin(
         layer_paths, table, strategy_space, dataflows, train)

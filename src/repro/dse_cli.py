@@ -23,6 +23,7 @@ consume the same report via ``run_dse``.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import math
 import sys
@@ -46,6 +47,11 @@ from repro.nn.linear import LinearSpec
 OBJECTIVES = ("latency", "edp")
 MODES = ("infer", "train", "both")
 HW_SEARCH_MODES = ("off", "budget")
+TUNE_MODES = ("off", "cache", "measure")
+
+#: dominant-GEMM shapes measured for the --tune calibration table (per
+#: dataflow, at the heuristic tiling; heaviest shapes first)
+TUNE_CALIBRATION_SHAPES = 8
 
 #: vision workloads of the paper's Tables 1-4 (model_layers-backed)
 VISION_ARCHS = ("resnet18/cifar10", "resnet18/tiny_imagenet", "vit_ti4/cifar10")
@@ -202,6 +208,8 @@ def run_dse(
     mode: str = "infer",
     hw_search: str = "off",
     hw_budget: Optional[int] = None,
+    tune: str = "off",
+    tune_cache: Optional[str] = None,
 ) -> dict:
     """Run Algorithm 1 end-to-end; returns the JSON-serializable report.
 
@@ -219,16 +227,28 @@ def run_dse(
     ``hw_budget`` MACs — default: the base target's own PE count), every
     candidate is evaluated through the hw-batched cost-table engine, and
     the report gains a per-candidate ``hw_search`` section.
+
+    ``tune`` turns on the measured-latency loop (``repro.tune``): the
+    model's dominant GEMM shapes are measured per dataflow on this
+    machine (``"cache"`` = only cache misses, ``"measure"`` = re-measure)
+    and the resulting calibration rescales the analytic table before the
+    argmin.  The report gains a ``tune`` section; with ``--emit-plan``
+    the plan additionally carries measured kernel tilings.
     """
     if mode == "both":
         _check_train_compatible(objective, engine)  # fail before any search
-        infer, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens, smoke,
-                                  engine, "infer", hw_search, hw_budget)
-        train, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens, smoke,
-                                  engine, "train", hw_search, hw_budget)
+        _check_tune_compatible(tune, "both", objective, hw_search)
+        infer, _, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens,
+                                     smoke, engine, "infer", hw_search,
+                                     hw_budget)
+        train, _, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens,
+                                     smoke, engine, "train", hw_search,
+                                     hw_budget)
         return _both_report(infer, train)
-    report, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens, smoke,
-                               engine, mode, hw_search, hw_budget)
+    report, _, _, _, tuner = _run_dse(arch, hw, top_k, objective, tokens,
+                                      smoke, engine, mode, hw_search,
+                                      hw_budget, tune, tune_cache)
+    _save_tuner(tuner)
     return report
 
 
@@ -287,6 +307,8 @@ def run_dse_plan(
     mode: str = "infer",
     hw_search: str = "off",
     hw_budget: Optional[int] = None,
+    tune: str = "off",
+    tune_cache: Optional[str] = None,
 ):
     """Run the DSE and compile its result into an ExecutionPlan.
 
@@ -298,7 +320,11 @@ def run_dse_plan(
     with per-layer backward paths/backends/tilings.  Under
     ``hw_search="budget"`` the plan embeds the co-searched winning
     architecture (schema v3 ``hardware``) and its kernel tilings derive
-    from that architecture's array shape and buffer sizes.
+    from that architecture's array shape and buffer sizes.  Under
+    ``tune`` the search is measured-calibrated and the plan's tilings
+    are the autotuner's measured argmins (``tilings: "measured"``) —
+    served from the persistent cache, so a warm cache re-emits the
+    identical plan without measuring.
     """
     from repro.plan import BACKENDS, compile_plan
 
@@ -311,13 +337,14 @@ def run_dse_plan(
     infer_report = None
     if mode == "both":
         _check_train_compatible(objective, engine)  # fail before any search
-        infer_report, _, _, _ = _run_dse(
+        _check_tune_compatible(tune, "both", objective, hw_search)
+        infer_report, _, _, _, _ = _run_dse(
             arch, hw, top_k, objective, tokens, smoke, engine, "infer",
             hw_search, hw_budget)
     plan_mode = "train" if mode in ("train", "both") else "infer"
-    report, named, res, plan_hw = _run_dse(
+    report, named, res, plan_hw, tuner = _run_dse(
         arch, hw, top_k, objective, tokens, smoke, engine, plan_mode,
-        hw_search, hw_budget)
+        hw_search, hw_budget, tune, tune_cache)
     plan = compile_plan(
         named, res, plan_hw,
         arch=arch,
@@ -325,7 +352,26 @@ def run_dse_plan(
         tokens=report["tokens"],
         backend=plan_backend,
         total_latency_s=report["total_latency_s"],
+        tilings="heuristic" if tuner is None else "measured",
+        tuner=tuner,
     )
+    if tuner is not None:
+        # the argmin ran over the calibrated table, so each choice's
+        # latency landed in measured-rescaled units; divide the scale
+        # back out so the plan's per-layer provenance stays in the same
+        # analytic seconds as its total_latency_s (up to float rounding
+        # — (analytic * cal) / cal can differ from analytic by an ulp)
+        cal = report["tune"]["calibration"]
+        plan = dataclasses.replace(plan, layers=tuple(
+            dataclasses.replace(
+                lp, latency_s=lp.latency_s / cal.get(lp.dataflow, 1.0))
+            for lp in plan.layers))
+        # compilation may have measured additional (per-family) sweeps;
+        # refresh the report's counters and persist the cache
+        report["tune"]["n_measured"] = tuner.n_measured
+        report["tune"]["n_cache_hits"] = tuner.n_cache_hits
+        report["tune"]["n_cache_entries"] = len(tuner.cache)
+        _save_tuner(tuner)
     if mode == "both":
         report = _both_report(infer_report, report)
     return report, plan
@@ -370,6 +416,45 @@ def _check_train_compatible(objective: str, engine: str) -> None:
         raise ValueError("--mode train requires the vectorized engine")
 
 
+def _check_tune_compatible(tune: str, mode: str, objective: str,
+                           hw_search: str) -> None:
+    """Reject combinations the measured-latency loop cannot honour yet.
+
+    The calibration rescales the inference latency table; composing it
+    with the training decomposition, the EDP objective or the per-
+    candidate tables of an architecture co-search are open items
+    (ROADMAP.md)."""
+    if tune == "off":
+        return
+    if tune not in TUNE_MODES:
+        raise KeyError(f"unknown tune mode {tune!r}; have {TUNE_MODES}")
+    if mode != "infer":
+        raise ValueError(
+            "--tune calibrates the inference search; --mode "
+            f"{mode} is analytic-only for now")
+    if objective != "latency":
+        raise ValueError(
+            "--tune calibrates the latency objective; --objective "
+            f"{objective} is analytic-only for now")
+    if hw_search != "off":
+        raise ValueError(
+            "--tune composes with fixed-target searches only; measured "
+            "calibration of --hw-search candidates is an open item")
+
+
+def _make_tuner(tune: str, tune_cache: Optional[str]):
+    """Build the Autotuner over the persistent cache (lazy import)."""
+    from repro.tune import Autotuner, DEFAULT_CACHE_PATH, TuningCache
+
+    path = tune_cache or DEFAULT_CACHE_PATH
+    return Autotuner(TuningCache.load_or_empty(path), tune, cache_path=path)
+
+
+def _save_tuner(tuner) -> None:
+    if tuner is not None and tuner.cache_path is not None:
+        tuner.save()
+
+
 def _run_dse(
     arch: str,
     hw: str = "fpga_vu9p",
@@ -381,11 +466,17 @@ def _run_dse(
     mode: str = "infer",
     hw_search: str = "off",
     hw_budget: Optional[int] = None,
+    tune: str = "off",
+    tune_cache: Optional[str] = None,
 ):
-    """Shared pipeline; returns (report, named_layers, DSEResult, hw_cfg).
+    """Shared pipeline; returns (report, named_layers, DSEResult, hw_cfg,
+    tuner).
 
     The returned hardware config is the one the plan should compile for:
     the co-searched winner under ``hw_search``, else the fixed target.
+    The tuner is the live ``repro.tune.Autotuner`` when ``tune`` is on
+    (``run_dse_plan`` hands it to the plan compiler for measured
+    tilings, then persists its cache), else ``None``.
     """
     hw_cfg = get_target(hw)
     if objective not in OBJECTIVES:
@@ -406,6 +497,7 @@ def _run_dse(
                 "objective; --objective edp is fixed-architecture only")
         if engine == "scalar":
             raise ValueError("--hw-search requires the vectorized engine")
+    _check_tune_compatible(tune, mode, objective, hw_search)
 
     named, tokens = dse_problems(arch, tokens, smoke)
 
@@ -478,6 +570,33 @@ def _run_dse(
         table_build_s = tables.build_seconds
         obj_table = tables.edp(hw_cfg) if objective == "edp" else seconds_table
 
+    # stage 2b — measured calibration (repro.tune): measure the model's
+    # dominant GEMM shapes per dataflow on this machine and rescale the
+    # analytic table before the argmin
+    tuner = None
+    tune_report = None
+    calibration = None
+    if tune != "off":
+        from repro.tune import gemm_work_items, measured_calibration
+
+        tuner = _make_tuner(tune, tune_cache)
+        t0 = time.perf_counter()
+        shapes = gemm_work_items(layer_paths,
+                                 max_shapes=TUNE_CALIBRATION_SHAPES)
+        calibration = measured_calibration(shapes, tuner, hw_cfg)
+        tune_report = {
+            "mode": tune,
+            "cache": tuner.cache_path,
+            "device_kind": tuner.device_kind,
+            "interpret": tuner.interpret,
+            "n_calibration_shapes": len(shapes),
+            "calibration": calibration,
+            "n_measured": tuner.n_measured,
+            "n_cache_hits": tuner.n_cache_hits,
+            "n_cache_entries": len(tuner.cache),
+            "measure_s": time.perf_counter() - t0,
+        }
+
     # stage 3 — hierarchical global argmin over the chosen objective
     # (already folded into the outer architecture loop under hw search)
     if hw_search == "off":
@@ -487,7 +606,8 @@ def _run_dse(
                                 objective="train-latency",
                                 train_tables=train_tables)
         else:
-            res = global_search(layer_paths, hw_cfg, table=obj_table)
+            res = global_search(layer_paths, hw_cfg, table=obj_table,
+                                calibration=calibration)
         argmin_s = time.perf_counter() - t0
 
     layers = []
@@ -506,7 +626,10 @@ def _run_dse(
             "partitioning": list(choice.partitioning),
             "dataflow": choice.dataflow.value,
             "latency_s": latency_s,
-            "objective": choice.latency_s,  # == latency_s unless EDP
+            # the argmin's objective value: == latency_s unless EDP or
+            # --tune (then in measured-rescaled units, see the tune
+            # section's calibration scales)
+            "objective": choice.latency_s,
         }
         if mode == "train":
             entry["fwd_latency_s"] = choice.fwd_latency_s
@@ -525,6 +648,7 @@ def _run_dse(
         # winner under --hw-search, else the --hw target itself
         "hw_chosen": res.hw.name if res.hw is not None else hw,
         "hw_search": hw_search_report,
+        "tune": tune_report,
         "mode": mode,
         "objective": "train-latency" if mode == "train" else objective,
         "top_k": top_k,
@@ -553,7 +677,8 @@ def _run_dse(
             c.bwd_latency_s for c in res.choices)
         report["total_update_latency_s"] = sum(
             c.update_latency_s for c in res.choices)
-    return report, named, res, (res.hw if res.hw is not None else hw_cfg)
+    return (report, named, res,
+            (res.hw if res.hw is not None else hw_cfg), tuner)
 
 
 # ---------------------------------------------------------------------------
@@ -596,6 +721,18 @@ def _build_parser() -> argparse.ArgumentParser:
     p.add_argument("--engine", default="vectorized",
                    choices=("vectorized", "scalar"),
                    help="cost-table engine (scalar = per-cell oracle)")
+    p.add_argument("--tune", default="off", choices=TUNE_MODES,
+                   help="off: analytic search (default); cache/measure: "
+                        "measure dominant GEMM shapes per dataflow on this "
+                        "machine (cache = only cache misses, measure = "
+                        "re-measure), rescale the analytic table by the "
+                        "measured calibration before the argmin, and give "
+                        "--emit-plan measured kernel tilings "
+                        "(repro.tune; warm the cache with "
+                        "python -m repro.tune)")
+    p.add_argument("--tune-cache", default=None, metavar="PATH",
+                   help="tuning-cache file for --tune "
+                        "(default results/tuning_cache.json)")
     p.add_argument("--out", default="-", metavar="PATH",
                    help="report destination ('-' = stdout, default)")
     p.add_argument("--emit-plan", default=None, metavar="PATH",
@@ -628,6 +765,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         _build_parser().error("--plan-backend requires --emit-plan")
     if args.hw_budget is not None and args.hw_search == "off":
         _build_parser().error("--hw-budget requires --hw-search budget")
+    if args.tune_cache is not None and args.tune == "off":
+        _build_parser().error("--tune-cache requires --tune cache|measure")
     try:
         if args.emit_plan:
             report, plan = run_dse_plan(
@@ -642,6 +781,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 mode=args.mode,
                 hw_search=args.hw_search,
                 hw_budget=args.hw_budget,
+                tune=args.tune,
+                tune_cache=args.tune_cache,
             )
             plan.save(args.emit_plan)
             backends = sorted({lp.backend for lp in plan.layers})
@@ -649,7 +790,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                        if plan.hardware is not None else "")
             print(f"wrote plan {args.emit_plan} "
                   f"({len(plan.layers)} layer plans, backends {backends}"
-                  f"{hw_note})",
+                  f"{hw_note}, tilings {plan.tilings})",
                   file=sys.stderr)
         else:
             report = run_dse(
@@ -663,6 +804,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 mode=args.mode,
                 hw_search=args.hw_search,
                 hw_budget=args.hw_budget,
+                tune=args.tune,
+                tune_cache=args.tune_cache,
             )
     except (KeyError, ValueError) as e:
         msg = e.args[0] if e.args else e

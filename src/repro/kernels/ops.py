@@ -25,14 +25,9 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
-    size = x.shape[axis]
-    pad = (-size) % multiple
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+#: zero-pad one axis up to a block multiple (canonical implementation
+#: lives beside the kernel whose grid requires it)
+_pad_to = _tt_gemm._pad_to_block
 
 
 @functools.partial(
@@ -50,26 +45,23 @@ def gemm(
     interpret: bool | None = None,
     differentiable: bool = False,
 ) -> jax.Array:
-    """Dataflow-configurable GEMM; pads to block multiples and slices back.
+    """Dataflow-configurable GEMM for arbitrary (non-block-multiple) dims.
 
-    ``differentiable=True`` routes through :func:`tt_gemm.tt_gemm_vjp`
-    (custom-VJP kernel whose backward GEMMs are also Pallas calls), so
-    the whole padded call composes with ``jax.grad``; the padding and
-    slicing are plain jnp ops with standard transposes.
+    Padding to block multiples (and slicing back) happens inside
+    :func:`tt_gemm.tt_gemm` itself — zero rows/columns contribute
+    nothing to a matmul.  ``differentiable=True`` routes through
+    :func:`tt_gemm.tt_gemm_vjp` (custom-VJP kernel whose backward GEMMs
+    are also Pallas calls, each padding its own transposed shapes), so
+    the whole call composes with ``jax.grad``.
     """
     interpret = _default_interpret() if interpret is None else interpret
-    m, k = a.shape
-    _, n = b.shape
-    ap = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
-    bp = _pad_to(_pad_to(b, 0, block_k), 1, block_n)
     kernel = _tt_gemm.tt_gemm_vjp if differentiable else _tt_gemm.tt_gemm
-    out = kernel(
-        ap, bp,
+    return kernel(
+        a, b,
         dataflow=dataflow,  # type: ignore[arg-type]
         block_m=block_m, block_k=block_k, block_n=block_n,
         interpret=interpret,
     )
-    return out[:m, :n]
 
 
 def tt_linear(

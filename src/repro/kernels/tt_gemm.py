@@ -18,7 +18,10 @@ simulator models:
 Block shapes are the DSE's tiling decision <T_M, T_K, T_N>; MXU-aligned
 multiples of 128 (8 on the sublane dim) are preferred.
 
-Grids must tile the operands exactly — the ``ops.py`` wrapper zero-pads.
+Grids must tile the operands exactly; dims that are not block multiples
+are zero-padded up and the result sliced back automatically (zero rows
+and columns contribute nothing to a matmul), so autotuned tilings never
+need caller-side padding logic.
 """
 
 from __future__ import annotations
@@ -83,6 +86,15 @@ def _is_kernel(a_ref, b_ref, o_ref, *, n_k: int):
         o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
 
 
+def _pad_to_block(x: jax.Array, axis: int, block: int) -> jax.Array:
+    pad = (-x.shape[axis]) % block
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
 def tt_gemm(
     a: jax.Array,
     b: jax.Array,
@@ -96,19 +108,23 @@ def tt_gemm(
 ) -> jax.Array:
     """``a @ b`` via a dataflow-configurable Pallas kernel.
 
-    Dims must be multiples of the block shape (use ``ops.tt_gemm_padded``
-    otherwise).  ``interpret=True`` runs the kernel body in Python on CPU —
-    the container-side validation mode; TPU is the compile target.
+    Dims that are not multiples of the block shape are zero-padded up to
+    the next multiple and the result is sliced back — planned/autotuned
+    tilings compose without caller-side padding.  ``interpret=True`` runs
+    the kernel body in Python on CPU — the container-side validation
+    mode; TPU is the compile target.
     """
     m, k = a.shape
     k2, n = b.shape
     if k != k2:
         raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
     if m % block_m or k % block_k or n % block_n:
-        raise ValueError(
-            f"dims ({m},{k},{n}) not multiples of blocks "
-            f"({block_m},{block_k},{block_n})"
-        )
+        ap = _pad_to_block(_pad_to_block(a, 0, block_m), 1, block_k)
+        bp = _pad_to_block(_pad_to_block(b, 0, block_k), 1, block_n)
+        out = tt_gemm(ap, bp, dataflow=dataflow, block_m=block_m,
+                      block_k=block_k, block_n=block_n,
+                      out_dtype=out_dtype, interpret=interpret)
+        return out[:m, :n]
     out_dtype = out_dtype or a.dtype
     n_m, n_k, n_n = m // block_m, k // block_k, n // block_n
     out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)

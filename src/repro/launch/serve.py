@@ -60,6 +60,9 @@ def main() -> None:
         m = api(cfg, plan=plan)
         print(f"installed plan: arch={plan.arch} hw={plan.hw} "
               f"strategy={plan.strategy} ({len(plan.layers)} layer plans)")
+        print(f"plan tilings: {plan.tilings}"
+              + (" (autotuned — repro.tune)"
+                 if plan.tilings == "measured" else ""))
         if plan.hardware is not None:
             h = plan.hardware
             print(f"plan hardware: {h.name} ({h.pe_rows}x{h.pe_cols} PEs, "
@@ -105,9 +108,16 @@ def main() -> None:
         t_decode = time.time() - t0
 
     out = np.concatenate(tokens, axis=1)
-    print(f"prefill {args.batch}x{args.prompt_len}: {t_prefill*1e3:.1f} ms")
+    prefill_tok_s = args.batch * args.prompt_len / max(t_prefill, 1e-9)
+    decode_tok_s = args.batch * args.gen / max(t_decode, 1e-9)
+    total_tok = args.batch * (args.prompt_len + args.gen)
+    print(f"prefill {args.batch}x{args.prompt_len}: {t_prefill*1e3:.1f} ms "
+          f"({prefill_tok_s:.1f} tok/s)")
     print(f"decode  {args.gen} steps: {t_decode*1e3:.1f} ms "
-          f"({t_decode/args.gen*1e3:.2f} ms/tok, batch {args.batch})")
+          f"({t_decode/args.gen*1e3:.2f} ms/tok, batch {args.batch}, "
+          f"{decode_tok_s:.1f} tok/s)")
+    print(f"overall {total_tok} tokens: "
+          f"{total_tok / max(t_prefill + t_decode, 1e-9):.1f} tok/s")
     print("generated token ids (first row):", out[0][:16].tolist())
     if args.plan:
         import sys

@@ -10,6 +10,7 @@ from .schema import (
     BACKENDS,
     PLAN_FORMAT_VERSION,
     SUPPORTED_VERSIONS,
+    TILING_MODES,
     BackwardOp,
     ExecutionPlan,
     LayerPlan,
@@ -34,7 +35,8 @@ from .executor import (
 )
 
 __all__ = [
-    "BACKENDS", "PLAN_FORMAT_VERSION", "SUPPORTED_VERSIONS", "BackwardOp",
+    "BACKENDS", "PLAN_FORMAT_VERSION", "SUPPORTED_VERSIONS", "TILING_MODES",
+    "BackwardOp",
     "ExecutionPlan", "LayerPlan", "Tiling", "load_plan", "migrate_plan_json",
     "base_name", "batch_dim", "check_plan_for_config", "compile_plan",
     "streaming_fits", "validate_plan",

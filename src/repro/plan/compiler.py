@@ -43,7 +43,14 @@ from repro.core.paths import CandidatePath
 from repro.core.simulator import HardwareConfig
 from repro.core.tensor_network import Node, TensorNetwork
 
-from .schema import BACKENDS, BackwardOp, ExecutionPlan, LayerPlan, Tiling
+from .schema import (
+    BACKENDS,
+    TILING_MODES,
+    BackwardOp,
+    ExecutionPlan,
+    LayerPlan,
+    Tiling,
+)
 
 #: conservative VMEM ceiling for the streaming backend (half a v5e core's
 #: 16 MiB VMEM, leaving headroom for double-buffering the token blocks);
@@ -98,7 +105,7 @@ def batch_dim(tn: TensorNetwork) -> int:
     return math.prod(d for e, d in zip(x.edges, x.dims) if e in free)
 
 
-def _rebatch(tn: TensorNetwork, tokens: int) -> TensorNetwork:
+def rebatch(tn: TensorNetwork, tokens: int) -> TensorNetwork:
     """Rebind the input node's batch (free) edges to ``tokens`` total."""
     x = _input_node(tn)
     free = set(tn.free_edges)
@@ -133,8 +140,26 @@ def streaming_fits(
     budget_bytes: int = VMEM_BUDGET_BYTES,
 ) -> bool:
     """Whether the full contraction of one token block stays in VMEM."""
-    block = _rebatch(tn, block_tokens)
+    block = rebatch(tn, block_tokens)
     return _peak_live_elements(block, steps) * bytes_per_elem <= budget_bytes
+
+
+def default_blocks(
+    M: int, K: int, N: int,
+    cap_m: int = _DEFAULT_BLOCK_CAP,
+    cap_k: Optional[int] = None,
+    cap_n: int = _DEFAULT_BLOCK_CAP,
+) -> tuple[int, int, int]:
+    """The heuristic ``(block_m, block_k, block_n)`` for one GEMM shape.
+
+    Shared with the autotuner (``repro.tune.heuristic_blocks``), which
+    measures its calibration at exactly this operating point — the
+    tiling the analytic argmin would deploy.
+    """
+    cap_k = max(cap_m, cap_n) if cap_k is None else cap_k
+    return (max(8, _pow2_le(min(cap_m, M))),
+            max(8, _pow2_le(min(cap_k, K))),
+            max(8, _pow2_le(min(cap_n, N))))
 
 
 def _tiling_for_path(
@@ -145,23 +170,60 @@ def _tiling_for_path(
     the N dimension, and the reduction tile by the longer side."""
     cap_m = hw.pe_rows if hw is not None else _DEFAULT_BLOCK_CAP
     cap_n = hw.pe_cols if hw is not None else _DEFAULT_BLOCK_CAP
-    cap_k = max(cap_m, cap_n)
     g = max(path.gemms, key=lambda g: g.macs)
+    bm, bk, bn = default_blocks(g.M, g.K, g.N, cap_m=cap_m, cap_n=cap_n)
     return Tiling(
-        block_m=max(8, _pow2_le(min(cap_m, g.M))),
-        block_k=max(8, _pow2_le(min(cap_k, g.K))),
-        block_n=max(8, _pow2_le(min(cap_n, g.N))),
+        block_m=bm,
+        block_k=bk,
+        block_n=bn,
         block_tokens=max(8, _pow2_le(min(256, tokens))),
     )
 
 
-def _choose_tiling(
+def choose_tiling(
     choice: LayerChoice, tokens: int, hw: Optional[HardwareConfig] = None
 ) -> Tiling:
     return _tiling_for_path(choice.path, tokens, hw)
 
 
-def _choose_backend(
+def _measured_tiling(
+    tn: TensorNetwork,
+    choice: LayerChoice,
+    heuristic: Tiling,
+    backend: str,
+    tokens: int,
+    tuner,
+    hw: Optional[HardwareConfig],
+) -> Tiling:
+    """Replace the heuristic tiling by the autotuner's measured argmin.
+
+    The heuristic is injected into every sweep, so the measured tiling
+    can tie it but never lose to it (on the machine doing the tuning).
+    ``tt_gemm`` layers tune the dominant GEMM's ``block_m/k/n`` under
+    the plan's dataflow; ``streaming_tt`` layers sweep ``block_tokens``
+    within the same VMEM budget the backend choice assumed; ``jnp``
+    layers (and streaming networks the kernel layout cannot express)
+    keep the heuristic.
+    """
+    if backend == "tt_gemm":
+        g = max(choice.path.gemms, key=lambda g: g.macs)
+        bm, bk, bn = tuner.tune_gemm(
+            int(g.M), int(g.K), int(g.N), choice.dataflow.value,
+            include=[(heuristic.block_m, heuristic.block_k,
+                      heuristic.block_n)])
+        return dataclasses.replace(heuristic, block_m=bm, block_k=bk,
+                                   block_n=bn)
+    if backend == "streaming_tt":
+        bt = tuner.tune_streaming(
+            tn, choice.path.steps, tokens,
+            include=[heuristic.block_tokens],
+            budget_bytes=_streaming_budget(hw))
+        if bt is not None:
+            return dataclasses.replace(heuristic, block_tokens=bt)
+    return heuristic
+
+
+def choose_backend(
     tn: TensorNetwork,
     choice: LayerChoice,
     tiling: Tiling,
@@ -340,6 +402,8 @@ def compile_plan(
     tokens: int = 0,
     backend: str = "auto",
     total_latency_s: Optional[float] = None,
+    tilings: str = "heuristic",
+    tuner=None,
 ) -> ExecutionPlan:
     """Compile a DSE result into an installable :class:`ExecutionPlan`.
 
@@ -350,9 +414,23 @@ def compile_plan(
     after a co-search): it is embedded in the plan (schema v3), and for
     co-searched results it also drives the kernel tiling caps and the
     streaming-backend VMEM budget.
+
+    ``tilings="measured"`` replaces each layer's heuristic forward
+    tiling by the measured argmin of ``tuner`` (a
+    ``repro.tune.Autotuner`` — required in this mode): sweeps are
+    deduped across layer families and served from the tuner's
+    persistent cache, so a warm cache compiles without any measurement.
+    Backend selection and backward-op tilings stay heuristic — the
+    executor is unchanged either way.
     """
     if backend != "auto" and backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; have {('auto',) + BACKENDS}")
+    if tilings not in TILING_MODES:
+        raise ValueError(
+            f"unknown tilings mode {tilings!r}; have {TILING_MODES}")
+    if tilings == "measured" and tuner is None:
+        raise ValueError(
+            "tilings='measured' requires a tuner (repro.tune.Autotuner)")
     if len(named_layers) != len(result.choices):
         raise ValueError(
             f"{len(named_layers)} layers vs {len(result.choices)} choices")
@@ -377,9 +455,13 @@ def compile_plan(
                     f"instances of {name!r} received divergent DSE choices; "
                     "cannot collapse to one scanned layer plan")
             continue
-        tiling = _choose_tiling(choice, tokens or batch_dim(tn), tile_hw)
+        tiling = choose_tiling(choice, tokens or batch_dim(tn), tile_hw)
         be = (backend if backend != "auto"
-              else _choose_backend(tn, choice, tiling, tile_hw))
+              else choose_backend(tn, choice, tiling, tile_hw))
+        if tilings == "measured":
+            tiling = _measured_tiling(tn, choice, tiling, be,
+                                      tokens or batch_dim(tn), tuner,
+                                      tile_hw)
         by_family[name] = LayerPlan(
             name=name,
             path_index=choice.path_index,
@@ -408,4 +490,5 @@ def compile_plan(
         total_latency_s=(result.total_latency_s if total_latency_s is None
                          else total_latency_s),
         hardware=hw,
+        tilings=tilings,
     )

@@ -41,6 +41,11 @@ SUPPORTED_VERSIONS = (1, 2, 3)
 #: executor backends a layer plan may name
 BACKENDS = ("jnp", "tt_gemm", "streaming_tt")
 
+#: how the plan's kernel tilings were derived: the compiler's analytic
+#: heuristic (dominant GEMM + architecture caps), or the measured argmin
+#: of the empirical autotuner (``repro.tune``) — provenance, not behavior
+TILING_MODES = ("heuristic", "measured")
+
 _DATAFLOWS = ("IS", "OS", "WS")
 
 
@@ -235,6 +240,11 @@ class ExecutionPlan:
     #: co-searched winner under ``--hw-search``, else the named target.
     #: ``None`` only for migrated plans whose ``hw`` name is unregistered.
     hardware: Optional[HardwareConfig] = None
+    #: tiling provenance: ``"measured"`` when the per-layer tilings are
+    #: the autotuner's measured argmin (``repro.tune``), else the
+    #: compiler's analytic heuristic.  Optional wire field (absent =
+    #: ``"heuristic"``), so v3 readers stay compatible.
+    tilings: str = "heuristic"
     version: int = PLAN_FORMAT_VERSION
 
     def __post_init__(self) -> None:
@@ -242,6 +252,10 @@ class ExecutionPlan:
         if len(set(names)) != len(names):
             dup = sorted({n for n in names if names.count(n) > 1})
             raise ValueError(f"duplicate layer plans for {dup}")
+        if self.tilings not in TILING_MODES:
+            raise ValueError(
+                f"unknown tilings provenance {self.tilings!r}; "
+                f"have {TILING_MODES}")
         if self.hardware is not None and not isinstance(self.hardware,
                                                         HardwareConfig):
             raise ValueError(
@@ -276,6 +290,7 @@ class ExecutionPlan:
                          if self.hardware is not None else None),
             "objective": self.objective,
             "strategy": self.strategy,
+            "tilings": self.tilings,
             "tokens": self.tokens,
             "total_latency_s": self.total_latency_s,
             "layers": [lp.to_json() for lp in self.layers],
@@ -303,6 +318,7 @@ class ExecutionPlan:
             total_latency_s=float(d.get("total_latency_s", 0.0)),
             hardware=(HardwareConfig.from_json(hardware)
                       if hardware is not None else None),
+            tilings=str(d.get("tilings", "heuristic")),
             version=PLAN_FORMAT_VERSION,
         )
 

@@ -1,0 +1,66 @@
+"""Empirical autotuning: close the loop from analytic DSE to wall-clock.
+
+The analytic cost model ranks configurations; this subsystem *measures*
+them — real Pallas kernel variants, on the machine serving traffic —
+and feeds the measurements back into the two consumers:
+
+- **plan compilation**: ``compile_plan(..., tilings="measured",
+  tuner=...)`` replaces the heuristic per-layer tilings with the
+  measured argmin per unique (GEMM shape, dataflow) / streaming problem;
+- **the DSE itself**: ``global_search(..., calibration=...)`` rescales
+  the analytic table per dataflow by measured/analytic ratios, so the
+  argmin can genuinely change when measurements disagree with the model.
+
+Measurements live in a persistent, canonical-JSON cache keyed by
+(problem, backend, device kind, interpret flag) — a warm cache replays
+with zero measurements, making tuned plans reproducible bit-for-bit.
+
+CLI: ``python -m repro.tune`` (warm the cache), ``python -m repro.dse
+--tune {off,cache,measure}`` (calibrated search + measured plan tilings).
+"""
+
+from .autotune import (
+    TUNE_MODES,
+    Autotuner,
+    analytic_gemm_seconds,
+    gemm_work_items,
+    heuristic_blocks,
+    measured_calibration,
+)
+from .cache import (
+    CACHE_FORMAT,
+    CACHE_VERSION,
+    DEFAULT_CACHE_PATH,
+    TuningCache,
+    TuningEntry,
+    parse_variant,
+    variant_key,
+)
+from .measure import (
+    default_interpret,
+    device_kind,
+    measure_callable,
+    measure_gemm,
+    measure_streaming,
+)
+from .variants import (
+    GEMM_BLOCK_CAPS,
+    STREAM_BLOCK_CAPS,
+    block_candidates,
+    dominant_gemm,
+    gemm_variants,
+    network_signature,
+    streaming_variants,
+)
+
+__all__ = [
+    "TUNE_MODES", "Autotuner", "analytic_gemm_seconds", "gemm_work_items",
+    "heuristic_blocks", "measured_calibration",
+    "CACHE_FORMAT", "CACHE_VERSION", "DEFAULT_CACHE_PATH", "TuningCache",
+    "TuningEntry", "parse_variant", "variant_key",
+    "default_interpret", "device_kind", "measure_callable", "measure_gemm",
+    "measure_streaming",
+    "GEMM_BLOCK_CAPS", "STREAM_BLOCK_CAPS", "block_candidates",
+    "dominant_gemm", "gemm_variants", "network_signature",
+    "streaming_variants",
+]

@@ -1,0 +1,281 @@
+"""The autotuner: measured variant sweeps + the DSE calibration table.
+
+:class:`Autotuner` is the handle everything else consumes:
+
+- ``plan/compiler.compile_plan(..., tilings="measured", tuner=...)`` asks
+  it for the best measured ``(block_m, block_k, block_n)`` per unique
+  (dominant GEMM, dataflow) and the best measured ``block_tokens`` per
+  unique streaming-layer problem;
+- ``repro.dse --tune`` asks it for per-dataflow measured seconds of the
+  model's dominant GEMM shapes, from which :func:`measured_calibration`
+  builds the per-dataflow rescale table ``dse.global_search`` applies;
+- ``python -m repro.tune`` drives it directly to warm the cache.
+
+Two modes: ``"cache"`` measures only what the persistent cache misses
+(the normal mode — a warm cache replays with **zero** measurements, so
+re-emitting a plan is deterministic and bit-identical), ``"measure"``
+re-measures every requested variant and overwrites the cached numbers.
+``n_measured`` / ``n_cache_hits`` make "the second run measured nothing"
+an assertable property.
+
+Deduplication mirrors ``core/cost_table``: repeated transformer blocks
+share one cache entry per unique (GEMM shape, dataflow) and per unique
+(layer network, token count), so the measurement count scales with the
+number of *distinct* problems, not with model depth.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+from typing import Optional, Sequence
+
+from repro.core.simulator import ALL_DATAFLOWS, Dataflow, gemm_cost_model
+from repro.hw import HardwareConfig
+from repro.plan.compiler import (
+    VMEM_BUDGET_BYTES,
+    default_blocks,
+    rebatch,
+)
+from repro.core.tensor_network import TensorNetwork
+
+from . import measure as _measure
+from .cache import TuningCache, TuningEntry, variant_key
+from .variants import (
+    GEMM_BLOCK_CAPS,
+    STREAM_BLOCK_CAPS,
+    dominant_gemm,
+    gemm_variants,
+    network_signature,
+    streaming_variants,
+)
+
+TUNE_MODES = ("cache", "measure")
+
+#: the compiler's default (fixed-target) tiling for one GEMM shape —
+#: literally ``plan/compiler.default_blocks``, so the calibration's
+#: operating point is the tiling the analytic argmin would deploy
+heuristic_blocks = default_blocks
+
+
+class Autotuner:
+    """Measured-variant sweeps over a persistent :class:`TuningCache`."""
+
+    def __init__(
+        self,
+        cache: Optional[TuningCache] = None,
+        mode: str = "cache",
+        *,
+        cache_path: Optional[str] = None,
+        device_kind: Optional[str] = None,
+        interpret: Optional[bool] = None,
+        warmup: int = _measure.WARMUP,
+        repeats: int = _measure.REPEATS,
+        measure_gemm_fn=None,
+        measure_streaming_fn=None,
+    ) -> None:
+        if mode not in TUNE_MODES:
+            raise ValueError(f"unknown tune mode {mode!r}; have {TUNE_MODES}")
+        self.cache = cache if cache is not None else TuningCache()
+        self.mode = mode
+        self.cache_path = cache_path
+        self.device_kind = (device_kind if device_kind is not None
+                            else _measure.device_kind())
+        self.interpret = (interpret if interpret is not None
+                          else _measure.default_interpret())
+        self.warmup = warmup
+        self.repeats = repeats
+        # injection points for tests (no real kernels, no real clocks)
+        self._measure_gemm = measure_gemm_fn or _measure.measure_gemm
+        self._measure_streaming = (measure_streaming_fn
+                                   or _measure.measure_streaming)
+        self.n_measured = 0
+        self.n_cache_hits = 0
+        self._measured_this_run: set[str] = set()
+
+    def save(self, path: Optional[str] = None) -> None:
+        """Persist the cache (to ``path`` or the constructor's path)."""
+        target = path or self.cache_path
+        if target is None:
+            raise ValueError("no cache path to save to")
+        self.cache.save(target)
+
+    # -- keys --------------------------------------------------------------
+    def _suffix(self) -> str:
+        return f"{self.device_kind}:{'interp' if self.interpret else 'native'}"
+
+    def gemm_key(self, M: int, K: int, N: int, dataflow: str) -> str:
+        return f"gemm:{M}x{K}x{N}:{dataflow}:{self._suffix()}"
+
+    def streaming_key(self, tn: TensorNetwork, steps, tokens: int) -> str:
+        sig = network_signature(rebatch(tn, 1), steps)
+        digest = hashlib.sha1(sig.encode()).hexdigest()[:16]
+        return f"stream:{digest}:t{tokens}:{self._suffix()}"
+
+    # -- GEMM sweeps -------------------------------------------------------
+    def _gemm_entry(self, M: int, K: int, N: int,
+                    dataflow: str) -> TuningEntry:
+        return self.cache.ensure(
+            self.gemm_key(M, K, N, dataflow),
+            kind="gemm", backend="tt_gemm",
+            device_kind=self.device_kind, interpret=self.interpret,
+            problem={"M": int(M), "K": int(K), "N": int(N),
+                     "dataflow": str(dataflow)},
+        )
+
+    def _measure_into(self, entry: TuningEntry, vk: str, measure) -> float:
+        run_key = f"{entry.key}#{vk}"
+        fresh = run_key in self._measured_this_run
+        if vk in entry.measured_s and (self.mode == "cache" or fresh):
+            # "measure" re-measures stale cache entries, but at most once
+            # per process — calibration and the family sweeps share points
+            self.n_cache_hits += 1
+            return entry.measured_s[vk]
+        s = float(measure())
+        entry.measured_s[vk] = s
+        self._measured_this_run.add(run_key)
+        self.n_measured += 1
+        return s
+
+    def gemm_seconds(self, M: int, K: int, N: int, dataflow: str,
+                     blocks: tuple[int, int, int]) -> float:
+        """Measured seconds of one (shape, dataflow, tiling) variant."""
+        entry = self._gemm_entry(M, K, N, dataflow)
+        return self._measure_into(
+            entry, variant_key(blocks),
+            lambda: self._measure_gemm(
+                M, K, N, dataflow, blocks, interpret=self.interpret,
+                warmup=self.warmup, repeats=self.repeats))
+
+    def tune_gemm(
+        self,
+        M: int, K: int, N: int,
+        dataflow: str,
+        *,
+        include: Sequence[tuple[int, int, int]] = (),
+        caps: Sequence[int] = GEMM_BLOCK_CAPS,
+    ) -> tuple[int, int, int]:
+        """Best measured ``(block_m, block_k, block_n)`` for one GEMM.
+
+        Sweeps the feasible variant space (plus ``include`` — pass the
+        compiler's heuristic tiling so the result can never lose to it),
+        measuring cache misses; returns the argmin over the swept set,
+        ties to the numerically smallest variant.
+        """
+        variants = gemm_variants(M, K, N, caps=caps, include=include)
+        entry = self._gemm_entry(M, K, N, dataflow)
+        measured = {
+            v: self._measure_into(
+                entry, variant_key(v),
+                lambda v=v: self._measure_gemm(
+                    M, K, N, dataflow, v, interpret=self.interpret,
+                    warmup=self.warmup, repeats=self.repeats))
+            for v in variants
+        }
+        return min(measured, key=lambda v: (measured[v], v))
+
+    # -- streaming sweeps --------------------------------------------------
+    def tune_streaming(
+        self,
+        tn: TensorNetwork,
+        steps,
+        tokens: int,
+        *,
+        include: Sequence[int] = (),
+        budget_bytes: int = VMEM_BUDGET_BYTES,
+        caps: Sequence[int] = STREAM_BLOCK_CAPS,
+    ) -> Optional[int]:
+        """Best measured ``block_tokens`` for one streaming-layer problem.
+
+        ``tn`` is the full-batch layer network; each variant rebatches it
+        to the candidate block and times the padded streaming call over
+        ``tokens`` rows.  Returns ``None`` when the network does not fit
+        the single-streamed-operand kernel layout (the caller keeps the
+        heuristic tiling).
+        """
+        variants = streaming_variants(tn, steps, tokens, caps=caps,
+                                      budget_bytes=budget_bytes,
+                                      include=include)
+        if not variants:
+            return None
+        key = self.streaming_key(tn, steps, tokens)
+        entry = self.cache.ensure(
+            key, kind="streaming", backend="streaming_tt",
+            device_kind=self.device_kind, interpret=self.interpret,
+            problem={"signature": network_signature(rebatch(tn, 1), steps),
+                     "tokens": int(tokens)},
+        )
+        measured: dict[int, float] = {}
+        for bt in variants:
+            tn_block = rebatch(tn, bt)
+            try:
+                s = self._measure_into(
+                    entry, variant_key((bt,)),
+                    lambda: self._measure_streaming(
+                        tn_block, steps, tokens, bt,
+                        interpret=self.interpret,
+                        warmup=self.warmup, repeats=self.repeats))
+            except ValueError:
+                # network layout unsupported by the streaming kernel
+                # (e.g. trailing conv patch edge) — nothing to tune
+                return None
+            measured[bt] = s
+        return min(measured, key=lambda bt: (measured[bt], bt))
+
+
+# ---------------------------------------------------------------------------
+# model-level work items + the DSE calibration table
+# ---------------------------------------------------------------------------
+
+def gemm_work_items(
+    layer_paths: Sequence[Sequence],
+    max_shapes: Optional[int] = None,
+) -> list[tuple[int, int, int]]:
+    """Unique dominant-GEMM shapes of a model's candidate paths.
+
+    One work item per unique shape (the measurement dedup), ordered by
+    the shape's own MAC volume descending (the heaviest GEMMs carry the
+    calibration signal), optionally truncated to ``max_shapes``.
+    """
+    shapes = {dominant_gemm(p) for paths in layer_paths for p in paths}
+    order = sorted(shapes, key=lambda s: (-(s[0] * s[1] * s[2]), s))
+    return order[:max_shapes] if max_shapes is not None else order
+
+
+def analytic_gemm_seconds(
+    M: int, K: int, N: int, dataflow, hw: HardwareConfig
+) -> float:
+    """The closed-form model's prediction for one monolithic GEMM."""
+    df = dataflow if isinstance(dataflow, Dataflow) else Dataflow(dataflow)
+    cycles, _, _ = gemm_cost_model(M, K, N, df, hw.pe_rows, hw.pe_cols, hw)
+    return float(cycles) / hw.freq_hz
+
+
+def measured_calibration(
+    shapes: Sequence[tuple[int, int, int]],
+    tuner: Autotuner,
+    hw: HardwareConfig,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+) -> dict[str, float]:
+    """Per-dataflow measured/analytic scale factors over ``shapes``.
+
+    Each shape is measured once per dataflow at the compiler's heuristic
+    tiling (the operating point the analytic argmin would deploy), and
+    the per-dataflow scale is the geometric mean of measured/analytic
+    ratios — robust to the absolute-magnitude gap between the modeled
+    accelerator and the measuring host, sensitive exactly to the
+    *relative* per-dataflow disagreement that can flip an argmin.
+    """
+    if not shapes:
+        raise ValueError("measured_calibration needs at least one shape")
+    scales: dict[str, float] = {}
+    for d in dataflows:
+        logs = []
+        for (M, K, N) in shapes:
+            measured = tuner.gemm_seconds(
+                M, K, N, d.value, heuristic_blocks(M, K, N))
+            analytic = analytic_gemm_seconds(M, K, N, d, hw)
+            if measured > 0 and analytic > 0:
+                logs.append(math.log(measured / analytic))
+        scales[d.value] = math.exp(sum(logs) / len(logs)) if logs else 1.0
+    return scales

@@ -1,0 +1,168 @@
+"""Persistent tuning cache: measured kernel latencies, keyed by machine.
+
+One :class:`TuningEntry` per tuning *problem* — a unique ``(GEMM shape,
+dataflow)`` pair for the ``tt_gemm`` backend, or a unique
+``(layer network, token count)`` pair for the ``streaming_tt`` backend —
+holding every variant measured so far plus the deterministic argmin.
+Entries are keyed by (problem, backend, device kind, interpret flag):
+measurements taken on one machine never leak onto another, and
+interpret-mode (CPU validation) numbers never masquerade as compiled-TPU
+numbers.
+
+Serialization is canonical (sorted keys, fixed indentation, trailing
+newline) so that save -> load -> save is byte-identical — the same
+round-trip property the plan schema guarantees, asserted by
+``tests/test_tune.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Mapping, Optional
+
+CACHE_FORMAT = "repro.tuning_cache"
+CACHE_VERSION = 1
+
+#: default on-disk location (``repro.tune`` / ``repro.dse --tune``)
+DEFAULT_CACHE_PATH = os.path.join("results", "tuning_cache.json")
+
+
+def variant_key(blocks: tuple[int, ...]) -> str:
+    """``(256, 128, 64)`` -> ``"256x128x64"`` (a JSON-safe dict key)."""
+    return "x".join(str(int(b)) for b in blocks)
+
+
+def parse_variant(key: str) -> tuple[int, ...]:
+    return tuple(int(p) for p in key.split("x"))
+
+
+@dataclasses.dataclass
+class TuningEntry:
+    """Measurements for one tuning problem on one device.
+
+    ``measured_s`` maps variant keys (``variant_key`` of the block
+    tuple: ``(block_m, block_k, block_n)`` for GEMMs,
+    ``(block_tokens,)`` for streaming sweeps) to median seconds.
+    ``best`` is the deterministic argmin — ties resolve to the
+    numerically smallest variant tuple, so replaying a cache always
+    reproduces the same tiling.
+    """
+
+    key: str
+    kind: str                      # "gemm" | "streaming"
+    backend: str                   # "tt_gemm" | "streaming_tt"
+    device_kind: str
+    interpret: bool
+    problem: dict                  # shape / network signature provenance
+    measured_s: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def best(self) -> Optional[tuple[int, ...]]:
+        if not self.measured_s:
+            return None
+        return min(self.measured_s,
+                   key=lambda k: (self.measured_s[k], parse_variant(k)))
+
+    @property
+    def best_blocks(self) -> Optional[tuple[int, ...]]:
+        b = self.best
+        return parse_variant(b) if b is not None else None
+
+    @property
+    def best_seconds(self) -> Optional[float]:
+        b = self.best
+        return self.measured_s[b] if b is not None else None
+
+    def to_json(self) -> dict:
+        return {
+            "kind": self.kind,
+            "backend": self.backend,
+            "device_kind": self.device_kind,
+            "interpret": self.interpret,
+            "problem": self.problem,
+            "measured_s": dict(self.measured_s),
+            "best": self.best,
+            "best_s": self.best_seconds,
+        }
+
+    @classmethod
+    def from_json(cls, key: str, d: Mapping) -> "TuningEntry":
+        return cls(
+            key=key,
+            kind=str(d["kind"]),
+            backend=str(d["backend"]),
+            device_kind=str(d["device_kind"]),
+            interpret=bool(d["interpret"]),
+            problem=dict(d["problem"]),
+            measured_s={str(k): float(v)
+                        for k, v in d.get("measured_s", {}).items()},
+        )
+
+
+class TuningCache:
+    """In-memory view of the persistent tuning cache file."""
+
+    def __init__(self, entries: Optional[dict[str, TuningEntry]] = None):
+        self.entries: dict[str, TuningEntry] = dict(entries or {})
+
+    # -- lookup / update ---------------------------------------------------
+    def get(self, key: str) -> Optional[TuningEntry]:
+        return self.entries.get(key)
+
+    def ensure(self, key: str, *, kind: str, backend: str, device_kind: str,
+               interpret: bool, problem: dict) -> TuningEntry:
+        e = self.entries.get(key)
+        if e is None:
+            e = TuningEntry(key=key, kind=kind, backend=backend,
+                            device_kind=device_kind, interpret=interpret,
+                            problem=problem)
+            self.entries[key] = e
+        return e
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # -- canonical JSON round-trip ----------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "format": CACHE_FORMAT,
+            "version": CACHE_VERSION,
+            "entries": {k: e.to_json() for k, e in self.entries.items()},
+        }
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_json(), indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def loads(cls, text: str) -> "TuningCache":
+        d = json.loads(text)
+        fmt = d.get("format")
+        if fmt != CACHE_FORMAT:
+            raise ValueError(f"not a tuning cache (format={fmt!r})")
+        version = int(d.get("version", -1))
+        if version != CACHE_VERSION:
+            raise ValueError(
+                f"tuning cache version {version} unsupported "
+                f"(this build reads version {CACHE_VERSION})")
+        return cls({k: TuningEntry.from_json(k, e)
+                    for k, e in d.get("entries", {}).items()})
+
+    def save(self, path: str) -> None:
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as f:
+            f.write(self.dumps())
+
+    @classmethod
+    def load(cls, path: str) -> "TuningCache":
+        with open(path) as f:
+            return cls.loads(f.read())
+
+    @classmethod
+    def load_or_empty(cls, path: str) -> "TuningCache":
+        if os.path.exists(path):
+            return cls.load(path)
+        return cls()

@@ -1,0 +1,151 @@
+"""Wall-clock measurement harness for kernel variants.
+
+The analytic simulator predicts; this module *measures*.  Each variant
+is timed on the machine actually running the kernels: one untimed
+warmup call (absorbs jit compilation), then ``repeats`` timed calls with
+``block_until_ready`` inside the timed region, keeping the median —
+robust to the one-off scheduler hiccup that poisons a mean or a min.
+
+Inputs are synthesized deterministically (fixed NumPy seed per shape),
+so measured numerics never depend on model parameters and two tuning
+runs of the same shape time the same arithmetic.
+
+On non-TPU hosts the kernels run in ``interpret=True`` mode: the timings
+then rank Python-level kernel-body evaluation (grid-step count dominates)
+rather than TPU performance — which is exactly what the serving path on
+that host executes, so the argmin is still the right tiling *for the
+machine serving traffic*.  The cache keys every measurement by device
+kind and interpret flag (``repro.tune.cache``) so the two regimes never
+mix.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tensor_network import TensorNetwork
+from repro.kernels import ops
+from repro.plan.executor import as_candidate_path
+
+#: defaults for the median-of-k protocol
+WARMUP = 1
+REPEATS = 5
+
+
+def device_kind() -> str:
+    """A cache-key-safe identity of the device measurements run on."""
+    d = jax.devices()[0]
+    return str(getattr(d, "device_kind", d.platform)).replace(" ", "_")
+
+
+def default_interpret() -> bool:
+    """Whether kernels on this host run in interpret mode (non-TPU)."""
+    return jax.default_backend() != "tpu"
+
+
+def measure_callable(
+    fn: Callable[[], jax.Array],
+    *,
+    warmup: int = WARMUP,
+    repeats: int = REPEATS,
+) -> float:
+    """Median wall-clock seconds of ``fn`` (which must block on its result)."""
+    for _ in range(max(1, warmup)):
+        fn()
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(statistics.median(times))
+
+
+def _seed_for(*dims: int) -> int:
+    return abs(hash(tuple(int(d) for d in dims))) % (2**31)
+
+
+def measure_gemm(
+    M: int, K: int, N: int,
+    dataflow: str,
+    blocks: tuple[int, int, int],
+    *,
+    interpret: bool | None = None,
+    warmup: int = WARMUP,
+    repeats: int = REPEATS,
+) -> float:
+    """Median seconds of one ``ops.gemm`` call at the given tiling."""
+    rng = np.random.default_rng(_seed_for(M, K, N))
+    a = jnp.asarray(rng.standard_normal((M, K), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal((K, N), dtype=np.float32))
+    bm, bk, bn = blocks
+
+    def run():
+        return ops.gemm(a, b, dataflow=dataflow, block_m=bm, block_k=bk,
+                        block_n=bn, interpret=interpret).block_until_ready()
+
+    return measure_callable(run, warmup=warmup, repeats=repeats)
+
+
+def synthesize_tensors(tn: TensorNetwork) -> tuple[jax.Array, list[jax.Array]]:
+    """Deterministic (streamed operand, cores) for a layer network.
+
+    The streamed node (``kind == "input"``) becomes a 2-d
+    ``(batch, prod(inner modes))`` operand; every other node becomes a
+    random core of its literal dims, in node order — the operand layout
+    ``ops.tt_linear`` / the streaming kernel expect.
+    """
+    stream = next(n for n in tn.nodes if n.kind == "input")
+    rng = np.random.default_rng(_seed_for(*stream.dims))
+    inner = 1
+    for d in stream.dims[1:]:
+        inner *= d
+    x = jnp.asarray(
+        rng.standard_normal((stream.dims[0], inner), dtype=np.float32))
+    cores = [
+        jnp.asarray(rng.standard_normal(n.dims, dtype=np.float32))
+        for n in tn.nodes if n.kind != "input"
+    ]
+    return x, cores
+
+
+def measure_streaming(
+    tn_block: TensorNetwork,
+    steps: Sequence[tuple[int, int]],
+    tokens: int,
+    block_tokens: int,
+    *,
+    interpret: bool | None = None,
+    warmup: int = WARMUP,
+    repeats: int = REPEATS,
+) -> float:
+    """Median seconds of one streaming TT call at ``block_tokens``.
+
+    ``tn_block`` must be the layer network rebatched to ``block_tokens``
+    (the per-block network the kernel contracts); ``tokens`` streamed
+    rows are synthesized and padded by the ``ops`` wrapper as at serve
+    time.
+    """
+    path = as_candidate_path(tn_block, steps)
+    x_full, cores = synthesize_tensors(tn_block)
+    inner = x_full.shape[1]
+    rng = np.random.default_rng(_seed_for(tokens, inner))
+    x = jnp.asarray(rng.standard_normal((tokens, inner), dtype=np.float32))
+
+    # jit the whole padded call, as the serve/train steps do — the timed
+    # region is kernel execution, not per-call tracing
+    @jax.jit
+    def apply(xv, cs):
+        return ops.tt_linear(xv, list(cs), tn_block, path,
+                             block_tokens=block_tokens, interpret=interpret)
+
+    def run():
+        return apply(x, tuple(cores)).block_until_ready()
+
+    return measure_callable(run, warmup=warmup, repeats=repeats)

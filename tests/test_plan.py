@@ -311,12 +311,12 @@ def test_batch_dim_and_rebatch_handle_conv_networks():
     conv networks, not dims[0] (which is an input-channel mode)."""
     from repro.core.tensor_network import tt_conv_network
     from repro.plan import batch_dim
-    from repro.plan.compiler import _rebatch
+    from repro.plan.compiler import rebatch
 
     tn = tt_conv_network(patches=64, in_modes=(4, 8), out_modes=(8, 4),
                          kernel=9, ranks=(4, 4, 4, 4))
     assert batch_dim(tn) == 64
-    rb = _rebatch(tn, 16)
+    rb = rebatch(tn, 16)
     x = next(n for n in rb.nodes if n.kind == "input")
     assert x.dims[x.edges.index("l")] == 16     # batch rebinds
     assert x.dims[x.edges.index("i1")] == 4     # modes untouched
