@@ -20,11 +20,21 @@ On CPU hosts the Pallas backends run in interpret mode — absolute
 numbers are Python-speed, but the dense/planned/tuned *ratios* rank real
 deployments of this machine, which is the autotuner's whole premise.
 
+Smoke workloads additionally run the **sustained-load scheduler**
+section (``sched_*`` columns): a fixed 6-request synthetic trace through
+the continuous-batching scheduler (``repro.serve``) under three
+deployments — the phase-specialized *plan pair* (prefill plan searched
+at the prefill token count, decode plan at the decode width) vs each
+plan installed alone for both phases.  The pair runs each stream under
+the phase-appropriate plan, so its sustained gen tok/s should match or
+beat the best single plan; per-request p50/p95 latency rides along.
+
   PYTHONPATH=src python -m benchmarks.run --only bench_serve
 """
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import statistics
 import time
@@ -40,6 +50,7 @@ from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import api
 from repro.models.config import ShapeConfig
 from repro.nn import install_plan
+from repro.serve import Scheduler, ServeEngine, ServePolicy, summarize, synthetic_trace
 from repro.sharding import use_rules
 
 from .common import RESULTS_DIR, emit
@@ -60,6 +71,11 @@ WORKLOADS = [
 ]
 
 REPEATS = 3
+
+#: sustained-load scheduler section (smoke workloads only)
+SCHED_REQUESTS = 6
+SCHED_REPEATS = 3
+SCHED_ARRIVAL_RATE = 1.0   # mean inter-arrival gap in decode steps
 
 
 def _serve_once(cfg, batch_tokens, prompt_len, gen, plan):
@@ -127,6 +143,57 @@ def _behavior(plan):
         for lp in plan.layers)
 
 
+def _sched_run(cfg, params, reqs, n_slots, max_seq, prefill_plan,
+               decode_plan) -> dict:
+    """Median-gen-tok/s summary of SCHED_REPEATS warm scheduler runs."""
+    shape = ShapeConfig("bench", max_seq, n_slots, "decode")
+    mesh = make_test_mesh()
+    with use_rules(make_rules(cfg, shape, mesh)):
+        eng = ServeEngine(cfg, params, n_slots=n_slots, max_seq=max_seq,
+                          prompt_bucket=8, prefill_plan=prefill_plan,
+                          decode_plan=decode_plan)
+        sched = Scheduler(eng, ServePolicy(schedule="continuous"), seed=0)
+        sched.run(reqs)  # warm: trace prefill/decode/admit outside timing
+        runs = [summarize(sched.run(reqs)) for _ in range(SCHED_REPEATS)]
+    runs.sort(key=lambda r: r["gen_tok_s"])
+    return runs[len(runs) // 2]
+
+
+def _bench_sched(cfg, arch, smoke, batch, prompt_len, gen, tokens,
+                 prefill_single) -> dict:
+    """Sustained-load columns: plan pair vs each plan alone."""
+    # the pair: the workload's own plan as the prefill leg, plus a
+    # decode-width search for the decode leg (phase-stamped copies)
+    _, decode_single = run_dse_plan(arch, tokens=batch, smoke=smoke)
+    pair_p = dataclasses.replace(prefill_single, phase="prefill")
+    pair_d = dataclasses.replace(decode_single, phase="decode")
+
+    reqs = synthetic_trace(SCHED_REQUESTS, cfg.vocab, prompt_len=prompt_len,
+                           gen=gen, arrival_rate=SCHED_ARRIVAL_RATE, seed=0)
+    max_seq = prompt_len + gen
+    params = api(cfg).init_params(jax.random.PRNGKey(0))
+    pair = _sched_run(cfg, params, reqs, batch, max_seq, pair_p, pair_d)
+    only_p = _sched_run(cfg, params, reqs, batch, max_seq,
+                        prefill_single, prefill_single)
+    only_d = _sched_run(cfg, params, reqs, batch, max_seq,
+                        decode_single, decode_single)
+    best_single = max(only_p["gen_tok_s"], only_d["gen_tok_s"])
+    return {
+        "sched_n_requests": SCHED_REQUESTS,
+        "sched_slots": batch,
+        "sched_steps": pair["steps"],
+        "sched_occupancy": pair["mean_occupancy"],
+        "sched_gen_tok_s_pair": pair["gen_tok_s"],
+        "sched_gen_tok_s_prefill_plan": only_p["gen_tok_s"],
+        "sched_gen_tok_s_decode_plan": only_d["gen_tok_s"],
+        "sched_pair_vs_best_single": pair["gen_tok_s"] / best_single,
+        "sched_ttft_p50_ms_pair": pair["ttft_p50_ms"],
+        "sched_ttft_p95_ms_pair": pair["ttft_p95_ms"],
+        "sched_latency_p50_ms_pair": pair["latency_p50_ms"],
+        "sched_latency_p95_ms_pair": pair["latency_p95_ms"],
+    }
+
+
 def _bench_one(name, arch, smoke, shape) -> dict:
     batch, prompt_len, gen = shape["batch"], shape["prompt_len"], shape["gen"]
     tokens = shape["tokens"]
@@ -159,12 +226,17 @@ def _bench_one(name, arch, smoke, shape) -> dict:
                            *_serve_once(cfg_tt, prompts, prompt_len, gen,
                                         tuned))
 
+    sched = (_bench_sched(cfg_tt, arch, smoke, batch, prompt_len, gen,
+                          tokens, planned)
+             if smoke else {})
+
     return {
         "arch": name,
         "batch": batch,
         "prompt_len": prompt_len,
         "gen": gen,
         "dse_tokens": tokens,
+        **sched,
         "backends": "+".join(sorted({lp.backend for lp in tuned.layers})),
         "n_tilings_changed": tilings_changed,
         "n_tune_measured": tune_report["tune"]["n_measured"],

@@ -127,6 +127,60 @@ def build_cost_table(
     return table
 
 
+def replay_paths(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    networks: Sequence[TensorNetwork],
+) -> list[tuple[CandidatePath, ...]]:
+    """Re-cost each layer's candidate paths against new tensor networks.
+
+    The serving throughput objective evaluates one contraction order at
+    two activation shapes (prefill tokens vs per-step decode tokens).
+    A candidate's *steps* are shape-independent; this replays them on
+    ``networks`` (one per layer, same order as ``layer_paths``) so the
+    same ``(layer, path_index)`` keys index both phase cost tables.
+    """
+    if len(layer_paths) != len(networks):
+        raise ValueError(
+            f"{len(layer_paths)} layers of candidate paths but "
+            f"{len(networks)} replacement networks")
+    out: list[tuple[CandidatePath, ...]] = []
+    for paths, tn in zip(layer_paths, networks):
+        replayed = []
+        for p in paths:
+            gemms = tuple(tn.gemm_sequence(p.steps))
+            replayed.append(CandidatePath(
+                steps=p.steps, macs=sum(g.macs for g in gemms), gemms=gemms))
+        out.append(tuple(replayed))
+    return out
+
+
+def combine_phase_tables(
+    prefill_table: Mapping[tuple[int, int, Partitioning, Dataflow], float],
+    decode_table: Mapping[tuple[int, int, Partitioning, Dataflow], float],
+    *,
+    w_prefill: float = 1.0,
+    w_decode: float = 1.0,
+) -> dict[tuple[int, int, Partitioning, Dataflow], float]:
+    """Decode-weighted combined serving cost: ``w_p*T_pre + w_d*T_dec``.
+
+    Both tables must index the identical (layer, path, partitioning,
+    dataflow) key set — build the decode table over
+    :func:`replay_paths`-ed candidates so path indices line up.  The
+    serving weight is typically ``w_decode = gen_tokens / n_slots``: one
+    admission's prefill amortized against its share of fixed-width
+    decode steps.
+    """
+    if prefill_table.keys() != decode_table.keys():
+        raise ValueError(
+            "phase tables index different (layer, path, partitioning, "
+            "dataflow) keys; build the decode table over "
+            "replay_paths(layer_paths, decode_networks)")
+    return {
+        k: w_prefill * prefill_table[k] + w_decode * decode_table[k]
+        for k in prefill_table
+    }
+
+
 def _hierarchical_argmin(
     layer_paths: Sequence[Sequence[CandidatePath]],
     table: Mapping[tuple[int, int, Partitioning, Dataflow], float],
@@ -325,10 +379,23 @@ def global_search(
     and the result records the winning architecture (``result.hw``) plus
     every candidate's outcome (``result.hw_candidates``).
     """
-    if objective not in ("latency", "train-latency"):
+    if objective not in ("latency", "train-latency", "throughput"):
         raise ValueError(
-            f"unknown objective {objective!r}; have ('latency', 'train-latency')"
+            f"unknown objective {objective!r}; have "
+            "('latency', 'train-latency', 'throughput')"
             " — EDP goes through the ``table`` argument")
+    if objective == "throughput":
+        if hw_space is not None:
+            raise ValueError(
+                "objective='throughput' selects over a pre-combined phase "
+                "table; the architecture co-search rebuilds tables per "
+                "candidate and cannot consume one (open item, ROADMAP.md)")
+        if table is None:
+            raise ValueError(
+                "objective='throughput' requires a pre-built combined "
+                "phase table — combine_phase_tables(prefill, decode, "
+                "w_decode=gen/slots) over replay_paths-aligned candidates "
+                "(repro.dse --objective throughput builds it)")
     if calibration is not None:
         if hw_space is not None:
             raise ValueError(

@@ -44,7 +44,7 @@ from repro.hw import HW_TARGETS  # noqa: F401  (re-export; registry is repro.hw)
 from repro.models.config import ModelConfig
 from repro.nn.linear import LinearSpec
 
-OBJECTIVES = ("latency", "edp")
+OBJECTIVES = ("latency", "edp", "throughput")
 MODES = ("infer", "train", "both")
 HW_SEARCH_MODES = ("off", "budget")
 TUNE_MODES = ("off", "cache", "measure")
@@ -210,6 +210,9 @@ def run_dse(
     hw_budget: Optional[int] = None,
     tune: str = "off",
     tune_cache: Optional[str] = None,
+    serve_gen: int = 128,
+    serve_slots: int = 8,
+    decode_tokens: Optional[int] = None,
 ) -> dict:
     """Run Algorithm 1 end-to-end; returns the JSON-serializable report.
 
@@ -247,7 +250,8 @@ def run_dse(
         return _both_report(infer, train)
     report, _, _, _, tuner = _run_dse(arch, hw, top_k, objective, tokens,
                                       smoke, engine, mode, hw_search,
-                                      hw_budget, tune, tune_cache)
+                                      hw_budget, tune, tune_cache,
+                                      serve_gen, serve_slots, decode_tokens)
     _save_tuner(tuner)
     return report
 
@@ -309,8 +313,17 @@ def run_dse_plan(
     hw_budget: Optional[int] = None,
     tune: str = "off",
     tune_cache: Optional[str] = None,
+    serve_gen: int = 128,
+    serve_slots: int = 8,
+    decode_tokens: Optional[int] = None,
+    phase: str = "",
 ):
     """Run the DSE and compile its result into an ExecutionPlan.
+
+    ``phase`` stamps the emitted plan as one half of a serving plan pair
+    (``"prefill"`` / ``"decode"``); the serve driver then refuses to
+    install it as the other half.  ``--emit-plan-pair`` runs this twice
+    — once per phase, each at its own token count.
 
     Returns ``(report, plan)`` — the same report as :func:`run_dse` plus
     the installable plan (``repro.plan.ExecutionPlan``).  This is the
@@ -344,7 +357,8 @@ def run_dse_plan(
     plan_mode = "train" if mode in ("train", "both") else "infer"
     report, named, res, plan_hw, tuner = _run_dse(
         arch, hw, top_k, objective, tokens, smoke, engine, plan_mode,
-        hw_search, hw_budget, tune, tune_cache)
+        hw_search, hw_budget, tune, tune_cache,
+        serve_gen, serve_slots, decode_tokens)
     plan = compile_plan(
         named, res, plan_hw,
         arch=arch,
@@ -354,6 +368,7 @@ def run_dse_plan(
         total_latency_s=report["total_latency_s"],
         tilings="heuristic" if tuner is None else "measured",
         tuner=tuner,
+        phase=phase,
     )
     if tuner is not None:
         # the argmin ran over the calibrated table, so each choice's
@@ -411,7 +426,7 @@ def _check_train_compatible(objective: str, engine: str) -> None:
     if objective != "latency":
         raise ValueError(
             "--mode train optimizes the train-latency objective; "
-            "--objective edp is an inference objective")
+            f"--objective {objective} is an inference objective")
     if engine == "scalar":
         raise ValueError("--mode train requires the vectorized engine")
 
@@ -468,6 +483,9 @@ def _run_dse(
     hw_budget: Optional[int] = None,
     tune: str = "off",
     tune_cache: Optional[str] = None,
+    serve_gen: int = 128,
+    serve_slots: int = 8,
+    decode_tokens: Optional[int] = None,
 ):
     """Shared pipeline; returns (report, named_layers, DSEResult, hw_cfg,
     tuner).
@@ -477,14 +495,30 @@ def _run_dse(
     The tuner is the live ``repro.tune.Autotuner`` when ``tune`` is on
     (``run_dse_plan`` hands it to the plan compiler for measured
     tilings, then persists its cache), else ``None``.
+
+    ``objective="throughput"`` optimizes serving tokens/s under a
+    sustained continuous-batching load: each layer's cost becomes
+    ``T_prefill(tokens) + (serve_gen / serve_slots) * T_decode``, where
+    the decode table replays the same candidate paths at
+    ``decode_tokens`` streamed tokens (default ``serve_slots`` — one
+    fixed-width decode step).  The report gains a ``serving`` section
+    with the phase decomposition of the winning configuration.
     """
     hw_cfg = get_target(hw)
     if objective not in OBJECTIVES:
         raise KeyError(f"unknown objective {objective!r}; have {OBJECTIVES}")
     if mode not in ("infer", "train"):
         raise KeyError(f"unknown mode {mode!r}; have {MODES}")
-    if engine == "scalar" and objective == "edp":
-        raise ValueError("objective=edp requires the vectorized engine")
+    if engine == "scalar" and objective in ("edp", "throughput"):
+        raise ValueError(
+            f"objective={objective} requires the vectorized engine")
+    if objective == "throughput":
+        if arch in VISION_ARCHS:
+            raise ValueError(
+                "objective=throughput models the serving prefill/decode "
+                "split of causal LMs; vision archs have no decode phase")
+        if serve_gen < 1 or serve_slots < 1:
+            raise ValueError("serve_gen and serve_slots must be >= 1")
     if mode == "train":
         _check_train_compatible(objective, engine)
     if hw_search not in HW_SEARCH_MODES:
@@ -494,7 +528,8 @@ def _run_dse(
         if objective != "latency":
             raise ValueError(
                 "--hw-search optimizes the latency (or train-latency) "
-                "objective; --objective edp is fixed-architecture only")
+                f"objective; --objective {objective} is fixed-architecture "
+                "only")
         if engine == "scalar":
             raise ValueError("--hw-search requires the vectorized engine")
     _check_tune_compatible(tune, mode, objective, hw_search)
@@ -564,11 +599,31 @@ def _run_dse(
         tables = None
         table_build_s = time.perf_counter() - t0
         obj_table = seconds_table
-    else:
+    decode_seconds = None
+    dec_tokens = decode_tokens if decode_tokens is not None else serve_slots
+    if hw_search == "off" and mode != "train" and engine != "scalar":
         tables = build_cost_tables(layer_paths, hw_cfg, all_parts)
         seconds_table = tables.seconds
         table_build_s = tables.build_seconds
-        obj_table = tables.edp(hw_cfg) if objective == "edp" else seconds_table
+        if objective == "edp":
+            obj_table = tables.edp(hw_cfg)
+        elif objective == "throughput":
+            # second cost table at decode shape: same contraction orders,
+            # activations replayed at dec_tokens streamed tokens so the
+            # (layer, path) keys line up across the phase tables
+            from repro.core.dse import combine_phase_tables, replay_paths
+
+            decode_named, _ = dse_problems(arch, dec_tokens, smoke)
+            decode_paths = replay_paths(
+                layer_paths, [tn for _, tn in decode_named])
+            decode_tables = build_cost_tables(decode_paths, hw_cfg, all_parts)
+            decode_seconds = decode_tables.seconds
+            table_build_s += decode_tables.build_seconds
+            obj_table = combine_phase_tables(
+                seconds_table, decode_seconds,
+                w_decode=serve_gen / serve_slots)
+        else:
+            obj_table = seconds_table
 
     # stage 2b — measured calibration (repro.tune): measure the model's
     # dominant GEMM shapes per dataflow on this machine and rescale the
@@ -606,8 +661,11 @@ def _run_dse(
                                 objective="train-latency",
                                 train_tables=train_tables)
         else:
-            res = global_search(layer_paths, hw_cfg, table=obj_table,
-                                calibration=calibration)
+            res = global_search(
+                layer_paths, hw_cfg, table=obj_table,
+                calibration=calibration,
+                objective="throughput" if objective == "throughput"
+                else "latency")
         argmin_s = time.perf_counter() - t0
 
     layers = []
@@ -677,6 +735,21 @@ def _run_dse(
             c.bwd_latency_s for c in res.choices)
         report["total_update_latency_s"] = sum(
             c.update_latency_s for c in res.choices)
+    if decode_seconds is not None:
+        # phase decomposition of the winning serving configuration:
+        # total objective = prefill + (gen/slots) * decode per admission
+        keys = [(c.layer, c.path_index, c.partitioning, c.dataflow)
+                for c in res.choices]
+        report["serving"] = {
+            "prefill_tokens": tokens,
+            "decode_tokens": dec_tokens,
+            "gen_tokens": serve_gen,
+            "n_slots": serve_slots,
+            "decode_weight": serve_gen / serve_slots,
+            "total_prefill_s": sum(seconds_table[k] for k in keys),
+            "total_decode_step_s": sum(decode_seconds[k] for k in keys),
+            "total_combined_s": res.total_latency_s,
+        }
     return (report, named, res,
             (res.hw if res.hw is not None else hw_cfg), tuner)
 
@@ -706,7 +779,24 @@ def _build_parser() -> argparse.ArgumentParser:
                         "(default: the base target's own PE count)")
     p.add_argument("--top-k", type=int, default=4, metavar="K",
                    help="candidate paths kept per layer (default 4)")
-    p.add_argument("--objective", default="latency", choices=OBJECTIVES)
+    p.add_argument("--objective", default="latency", choices=OBJECTIVES,
+                   help="latency: single-pass latency (default); edp: "
+                        "energy-delay product; throughput: serving tokens/s "
+                        "under sustained continuous-batching load — per "
+                        "layer, prefill latency at --tokens plus "
+                        "(--serve-gen / --serve-slots) decode steps at "
+                        "--decode-tokens (one compromise plan; for a "
+                        "per-phase pair see --emit-plan-pair)")
+    p.add_argument("--serve-gen", type=int, default=128, metavar="N",
+                   help="throughput objective: generated tokens per request "
+                        "(default 128)")
+    p.add_argument("--serve-slots", type=int, default=8, metavar="N",
+                   help="throughput objective: fixed decode batch width "
+                        "(default 8)")
+    p.add_argument("--decode-tokens", type=int, default=None, metavar="N",
+                   help="streamed tokens of one decode step for the "
+                        "throughput objective / the decode leg of "
+                        "--emit-plan-pair (default: --serve-slots)")
     p.add_argument("--mode", default="infer", choices=MODES,
                    help="infer: forward-only DSE (default); train: joint "
                         "fwd+bwd+update search (per-layer decomposition in "
@@ -738,6 +828,15 @@ def _build_parser() -> argparse.ArgumentParser:
     p.add_argument("--emit-plan", default=None, metavar="PATH",
                    help="compile the result into an executable plan "
                         "(docs/plan_format.md) and write it to PATH")
+    p.add_argument("--phase", default=None, choices=("prefill", "decode"),
+                   help="stamp the --emit-plan plan as one half of a "
+                        "serving plan pair (the serve driver refuses to "
+                        "install it as the other half)")
+    p.add_argument("--emit-plan-pair", default=None, metavar="PREFIX",
+                   help="run two searches — prefill at --tokens, decode at "
+                        "--decode-tokens — and write the phase-stamped pair "
+                        "to PREFIX.prefill.json / PREFIX.decode.json "
+                        "(serve with --plan-prefill/--plan-decode)")
     p.add_argument("--plan-backend", default="auto",
                    choices=("auto", "jnp", "tt_gemm", "streaming_tt"),
                    help="force one kernel backend for every emitted layer "
@@ -761,14 +860,62 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         return 0
     if not args.arch:
         _build_parser().error("--arch is required (see --list-archs)")
-    if args.plan_backend != "auto" and not args.emit_plan:
-        _build_parser().error("--plan-backend requires --emit-plan")
+    if args.plan_backend != "auto" and not (args.emit_plan
+                                            or args.emit_plan_pair):
+        _build_parser().error(
+            "--plan-backend requires --emit-plan or --emit-plan-pair")
+    if args.phase and not args.emit_plan:
+        _build_parser().error("--phase requires --emit-plan "
+                              "(--emit-plan-pair stamps both phases itself)")
+    if args.emit_plan_pair:
+        if args.emit_plan:
+            _build_parser().error(
+                "--emit-plan-pair and --emit-plan are mutually exclusive")
+        if args.objective == "throughput":
+            _build_parser().error(
+                "--objective throughput emits one compromise plan via "
+                "--emit-plan; --emit-plan-pair optimizes each phase "
+                "separately (pick one)")
+        if args.mode != "infer":
+            _build_parser().error(
+                "--emit-plan-pair compiles serving (inference) plans; "
+                f"--mode {args.mode} is not applicable")
+        if args.hw_search != "off":
+            _build_parser().error(
+                "--emit-plan-pair compiles a pair for one fixed --hw "
+                "target; co-searching a different architecture per phase "
+                "is unservable in one engine")
     if args.hw_budget is not None and args.hw_search == "off":
         _build_parser().error("--hw-budget requires --hw-search budget")
     if args.tune_cache is not None and args.tune == "off":
         _build_parser().error("--tune-cache requires --tune cache|measure")
     try:
-        if args.emit_plan:
+        if args.emit_plan_pair:
+            common = dict(
+                arch=args.arch, hw=args.hw, top_k=args.top_k,
+                objective=args.objective, smoke=args.smoke,
+                engine=args.engine, plan_backend=args.plan_backend,
+                mode="infer", tune=args.tune, tune_cache=args.tune_cache,
+            )
+            dec_tokens = (args.decode_tokens if args.decode_tokens is not None
+                          else args.serve_slots)
+            report_p, plan_p = run_dse_plan(
+                tokens=args.tokens, phase="prefill", **common)
+            report_d, plan_d = run_dse_plan(
+                tokens=dec_tokens, phase="decode", **common)
+            for plan, path in ((plan_p, f"{args.emit_plan_pair}.prefill.json"),
+                               (plan_d, f"{args.emit_plan_pair}.decode.json")):
+                plan.save(path)
+                backends = sorted({lp.backend for lp in plan.layers})
+                print(f"wrote {plan.phase} plan {path} "
+                      f"({len(plan.layers)} layer plans, backends {backends}"
+                      f", tokens {plan.tokens}, tilings {plan.tilings})",
+                      file=sys.stderr)
+            report = {
+                "arch": args.arch, "hw": args.hw, "mode": "plan-pair",
+                "prefill": report_p, "decode": report_d,
+            }
+        elif args.emit_plan:
             report, plan = run_dse_plan(
                 arch=args.arch,
                 hw=args.hw,
@@ -783,6 +930,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 hw_budget=args.hw_budget,
                 tune=args.tune,
                 tune_cache=args.tune_cache,
+                serve_gen=args.serve_gen,
+                serve_slots=args.serve_slots,
+                decode_tokens=args.decode_tokens,
+                phase=args.phase or "",
             )
             plan.save(args.emit_plan)
             backends = sorted({lp.backend for lp in plan.layers})
@@ -806,6 +957,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 hw_budget=args.hw_budget,
                 tune=args.tune,
                 tune_cache=args.tune_cache,
+                serve_gen=args.serve_gen,
+                serve_slots=args.serve_slots,
+                decode_tokens=args.decode_tokens,
             )
     except (KeyError, ValueError) as e:
         msg = e.args[0] if e.args else e

@@ -1,135 +1,199 @@
-"""Serving driver: batched prefill + decode loop with KV/state caches.
+"""Serving driver: request scheduler + phase-specialized execution plans.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tt-lm-100m --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+      --schedule continuous --batch 4 --n-requests 8 --prompt-len 32 --gen 16
 
-``--plan plan.json`` installs a DSE-compiled execution plan (emitted by
-``python -m repro.dse --emit-plan``, see docs/plan_format.md): every TT
-projection then contracts along its searched path through its searched
-kernel backend/dataflow, and the driver reports which backends executed.
+A thin CLI over :mod:`repro.serve`: requests (synthetic sustained load,
+or a ``--trace`` JSON) flow through the continuous-batching scheduler —
+batch-1 prefills admitted into free decode lanes of a fixed-width decode
+batch.  ``--schedule oneshot`` runs the same engine at concurrency 1
+(the bit-exact per-request reference).
+
+``--plan plan.json`` installs one DSE-compiled execution plan (emitted
+by ``python -m repro.dse --emit-plan``, see docs/plan_format.md) for
+both phases; ``--plan-prefill``/``--plan-decode`` install a
+phase-specialized pair (``--emit-plan-pair``) so each stream contracts
+under its own searched paths/backends/tilings.  ``--strict-plan`` makes
+an entirely unplanned run (a plan was given but no projection executed
+under it) a non-zero exit.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.launch.mesh import make_rules, make_test_mesh
-from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import api
 from repro.models.config import ShapeConfig
+from repro.serve import (
+    Scheduler,
+    ServeEngine,
+    ServePolicy,
+    load_trace,
+    summarize,
+    synthetic_trace,
+)
 from repro.sharding import use_rules
 
+EXIT_UNPLANNED = 3   # --strict-plan: plan given, zero planned executions
 
-def main() -> None:
+
+def _load_and_describe(path: str, label: str):
+    from repro.plan import load_plan
+
+    plan = load_plan(path)
+    print(f"installed {label}: arch={plan.arch} hw={plan.hw} "
+          f"strategy={plan.strategy} ({len(plan.layers)} layer plans)"
+          + (f" [phase {plan.phase}]" if plan.phase else ""))
+    print(f"plan tilings: {plan.tilings}"
+          + (" (autotuned — repro.tune)" if plan.tilings == "measured" else ""))
+    if plan.hardware is not None:
+        h = plan.hardware
+        print(f"plan hardware: {h.name} ({h.pe_rows}x{h.pe_cols} PEs, "
+              f"sram {h.sram_input_bytes // 1024}+"
+              f"{h.sram_output_bytes // 1024} KiB, "
+              f"bw {h.dram_words_per_cycle:g} words/cycle)")
+    return plan
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tt-lm-100m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--dense", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--schedule", default="oneshot",
+                    choices=("oneshot", "continuous"),
+                    help="oneshot: each request decodes alone (default); "
+                         "continuous: admit into free decode lanes each step")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slot width (fixed decode batch; default 4)")
+    ap.add_argument("--n-requests", type=int, default=None,
+                    help="synthetic-trace request count (default: --batch)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="mean inter-arrival gap in decode steps "
+                         "(0 = all requests arrive at t=0)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="request-trace JSON (repro.serve.load_trace) "
+                         "instead of the synthetic trace")
+    ap.add_argument("--prompt-bucket", type=int, default=8,
+                    help="round prompt lengths up to a multiple (bounds "
+                         "prefill trace count; default 8)")
+    ap.add_argument("--max-admissions", type=int, default=None,
+                    help="admission-policy cap per step (default: fill "
+                         "every free lane)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--plan", default=None, metavar="PATH",
-                    help="install a DSE execution plan (repro.dse --emit-plan)")
-    args = ap.parse_args()
+                    help="install one DSE execution plan for both phases "
+                         "(repro.dse --emit-plan)")
+    ap.add_argument("--plan-prefill", default=None, metavar="PATH",
+                    help="prefill-phase plan of a pair "
+                         "(repro.dse --emit-plan-pair)")
+    ap.add_argument("--plan-decode", default=None, metavar="PATH",
+                    help="decode-phase plan of a pair")
+    ap.add_argument("--strict-plan", action="store_true",
+                    help="exit non-zero if a plan was given but the run "
+                         "executed no planned projection (entirely "
+                         "UNPLANNED run)")
+    args = ap.parse_args(argv)
+
+    if args.plan and (args.plan_prefill or args.plan_decode):
+        ap.error("--plan is mutually exclusive with "
+                 "--plan-prefill/--plan-decode")
 
     cfg = get_config(args.arch, tt=not args.dense, smoke=args.smoke)
-    max_seq = args.prompt_len + args.gen
+    if cfg.family == "encdec":
+        print("error: the serve scheduler is causal-LM only; encdec runs "
+              "its own scalar-position decoder", file=sys.stderr)
+        return 2
+
+    any_plan = bool(args.plan or args.plan_prefill or args.plan_decode)
+    if args.plan:
+        prefill_plan = decode_plan = _load_and_describe(args.plan, "plan")
+    else:
+        prefill_plan = (_load_and_describe(args.plan_prefill, "prefill plan")
+                        if args.plan_prefill else None)
+        decode_plan = (_load_and_describe(args.plan_decode, "decode plan")
+                       if args.plan_decode else None)
+
+    if args.trace:
+        requests = load_trace(args.trace, cfg.vocab, seed=args.seed)
+    else:
+        n = args.n_requests if args.n_requests is not None else args.batch
+        requests = synthetic_trace(
+            n, cfg.vocab, prompt_len=args.prompt_len, gen=args.gen,
+            arrival_rate=args.arrival_rate, seed=args.seed)
+
+    bucket = args.prompt_bucket
+    max_seq = max(
+        max(-(-len(r.prompt) // bucket) * bucket,
+            len(r.prompt) + r.max_new_tokens - 1)
+        for r in requests) if requests else bucket
+
     shape = ShapeConfig("cli", max_seq, args.batch, "decode")
     mesh = make_test_mesh()
     rules = make_rules(cfg, shape, mesh)
-    if args.plan:
-        from repro.plan import (
-            check_plan_for_config,
-            load_plan,
-            reset_execution_log,
-        )
 
-        plan = load_plan(args.plan)
-        problems = check_plan_for_config(plan, args.arch, cfg)
-        if problems:
-            raise SystemExit(
-                "error: plan/model mismatch: " + "; ".join(problems))
-        reset_execution_log()
-        m = api(cfg, plan=plan)
-        print(f"installed plan: arch={plan.arch} hw={plan.hw} "
-              f"strategy={plan.strategy} ({len(plan.layers)} layer plans)")
-        print(f"plan tilings: {plan.tilings}"
-              + (" (autotuned — repro.tune)"
-                 if plan.tilings == "measured" else ""))
-        if plan.hardware is not None:
-            h = plan.hardware
-            print(f"plan hardware: {h.name} ({h.pe_rows}x{h.pe_cols} PEs, "
-                  f"sram {h.sram_input_bytes // 1024}+"
-                  f"{h.sram_output_bytes // 1024} KiB, "
-                  f"bw {h.dram_words_per_cycle:g} words/cycle)")
-    else:
-        m = api(cfg)
+    from repro.plan import execution_log, reset_execution_log
 
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len))
-    batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
-    if cfg.family in ("vlm", "encdec"):
-        n = cfg.n_frontend_tokens or 8
-        batch["frontend"] = jnp.asarray(
-            rng.normal(size=(args.batch, n, cfg.d_model)), jnp.dtype(cfg.dtype))
-
+    reset_execution_log()
+    t0 = time.perf_counter()
     with use_rules(rules):
-        params = m.init_params(jax.random.PRNGKey(0))
-        prefill = jax.jit(make_prefill_step(cfg, max_seq=max_seq))
-        decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+        params = api(cfg).init_params(jax.random.PRNGKey(0))
+        try:
+            engine = ServeEngine(
+                cfg, params, n_slots=args.batch, max_seq=max_seq,
+                prompt_bucket=bucket, prefill_plan=prefill_plan,
+                decode_plan=decode_plan, arch=args.arch)
+        except ValueError as e:
+            print(f"error: plan/model mismatch: {e}", file=sys.stderr)
+            return 2
+        sched = Scheduler(
+            engine,
+            ServePolicy(schedule=args.schedule,
+                        max_admissions_per_step=args.max_admissions),
+            temperature=args.temperature, seed=args.seed)
+        result = sched.run(requests)
+    total_s = time.perf_counter() - t0
 
-        t0 = time.time()
-        logits, caches = prefill(params, batch)
-        logits.block_until_ready()
-        t_prefill = time.time() - t0
+    s = summarize(result)
+    print(f"schedule {args.schedule}: {s['n_requests']} requests over "
+          f"{s['steps']} steps, {result.n_slots} decode slots, "
+          f"occupancy {s['mean_occupancy']:.2f}")
+    print(f"throughput: {s['gen_tok_s']:.1f} gen tok/s, "
+          f"{s['total_tok_s']:.1f} total tok/s "
+          f"({s['generated_tokens']} generated / {s['total_tokens']} total "
+          f"tokens, serve {s['wall_s']*1e3:.1f} ms, "
+          f"end-to-end {total_s*1e3:.1f} ms)")
+    print(f"latency: ttft p50/p95 {s['ttft_p50_ms']:.1f}/"
+          f"{s['ttft_p95_ms']:.1f} ms, request p50/p95 "
+          f"{s['latency_p50_ms']:.1f}/{s['latency_p95_ms']:.1f} ms")
+    if result.completions:
+        c0 = result.completions[0]
+        print(f"generated token ids (rid {c0.rid}): "
+              f"{list(c0.tokens)[:16]}")
 
-        key = jax.random.PRNGKey(1)
-        tokens = []
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        t0 = time.time()
-        for i in range(args.gen):
-            tokens.append(np.asarray(tok))
-            pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-            logits, caches = decode(params, tok, caches, pos)
-            if args.temperature > 0:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(
-                    sub, logits / args.temperature, axis=-1)[:, None].astype(jnp.int32)
-            else:
-                tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        jax.block_until_ready(logits)
-        t_decode = time.time() - t0
-
-    out = np.concatenate(tokens, axis=1)
-    prefill_tok_s = args.batch * args.prompt_len / max(t_prefill, 1e-9)
-    decode_tok_s = args.batch * args.gen / max(t_decode, 1e-9)
-    total_tok = args.batch * (args.prompt_len + args.gen)
-    print(f"prefill {args.batch}x{args.prompt_len}: {t_prefill*1e3:.1f} ms "
-          f"({prefill_tok_s:.1f} tok/s)")
-    print(f"decode  {args.gen} steps: {t_decode*1e3:.1f} ms "
-          f"({t_decode/args.gen*1e3:.2f} ms/tok, batch {args.batch}, "
-          f"{decode_tok_s:.1f} tok/s)")
-    print(f"overall {total_tok} tokens: "
-          f"{total_tok / max(t_prefill + t_decode, 1e-9):.1f} tok/s")
-    print("generated token ids (first row):", out[0][:16].tolist())
-    if args.plan:
-        import sys
-
-        from repro.plan import execution_log
-
+    if any_plan:
         log = execution_log()
-        by_backend: dict[str, int] = {}
+        by_stream: dict[str, dict[str, int]] = {}
         for r in log:
-            by_backend[r["backend"]] = by_backend.get(r["backend"], 0) + 1
-        print(f"planned executions (trace-time): {len(log)} "
-              f"by backend {dict(sorted(by_backend.items()))}")
+            st = by_stream.setdefault(r["stream"] or "?", {})
+            st[r["backend"]] = st.get(r["backend"], 0) + 1
+        n_pre = sum(by_stream.get("prefill", {}).values())
+        n_dec = sum(by_stream.get("decode", {}).values())
+        print(f"planned executions (trace-time): {len(log)} — "
+              f"prefill stream: {n_pre}, decode stream: {n_dec}")
+        for stream in ("prefill", "decode"):
+            if stream in by_stream:
+                print(f"  {stream} backends "
+                      f"{dict(sorted(by_stream[stream].items()))}")
         tilings = sorted({
             (r["tiling"]["block_m"], r["tiling"]["block_k"],
              r["tiling"]["block_n"], r["tiling"]["block_tokens"])
@@ -139,13 +203,16 @@ def main() -> None:
                   + " ".join(str(t) for t in tilings))
         if not log:
             print(
-                f"WARNING: plan {args.plan} (arch={plan.arch!r}) matched no "
-                f"executed projection of --arch {args.arch!r} — the run was "
-                "entirely UNPLANNED (layer names did not line up; was the "
-                "plan emitted for a different arch or tt/--dense setting?)",
+                "WARNING: a plan was given but the run executed no planned "
+                "projection — the run was entirely UNPLANNED (layer names "
+                "did not line up; was the plan emitted for a different arch "
+                "or tt/--dense setting?)",
                 file=sys.stderr,
             )
+            if args.strict_plan:
+                return EXIT_UNPLANNED
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

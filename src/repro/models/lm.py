@@ -251,7 +251,13 @@ def forward(
     x = shard(x, "batch", "seq", None)
     b, s, _ = x.shape
     base = cache_pos if cache_pos is not None else 0
-    positions = base + jnp.arange(s)[None, :]
+    base = jnp.asarray(base)
+    if base.ndim == 1:
+        # per-lane decode offsets (continuous batching): each slot of the
+        # fixed-width batch sits at its own sequence position
+        positions = base[:, None] + jnp.arange(s)[None, :]
+    else:
+        positions = base + jnp.arange(s)[None, :]
     positions = jnp.broadcast_to(positions, (b, s))
 
     x, new_caches, aux = _run_blocks(cfg, params, x, positions, caches, cache_pos)
@@ -350,12 +356,12 @@ def train_loss(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
     return cross_entropy(logits, batch["labels"]) + cfg.aux_loss_weight * aux
 
 
-def prefill(cfg: ModelConfig, params: dict, batch: dict, max_seq: int):
-    """Run the full prompt, returning (last-token logits, primed caches).
+def prefill_full(cfg: ModelConfig, params: dict, batch: dict, max_seq: int):
+    """Like :func:`prefill`, but returns the *full* (B, S, V) logits.
 
-    Attention families write the whole prompt's K/V into the caches in one
-    dynamic_update_slice (see ``attention_apply`` s>1-with-cache path);
-    state families advance their recurrent state through the scan.
+    The serve scheduler prefills bucket-padded prompts and needs the
+    logits at the last *real* token (position ``prompt_len - 1``), not
+    the last padded one — it slices the full logits at a traced index.
     """
     b, s = batch["tokens"].shape
     caches = init_caches(cfg, b, max_seq, jnp.dtype(cfg.dtype))
@@ -363,6 +369,17 @@ def prefill(cfg: ModelConfig, params: dict, batch: dict, max_seq: int):
         cfg, params, batch["tokens"], frontend=batch.get("frontend"),
         caches=caches, cache_pos=jnp.zeros((), jnp.int32),
     )
+    return logits, caches
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_seq: int):
+    """Run the full prompt, returning (last-token logits, primed caches).
+
+    Attention families write the whole prompt's K/V into the caches in one
+    dynamic_update_slice (see ``attention_apply`` s>1-with-cache path);
+    state families advance their recurrent state through the scan.
+    """
+    logits, caches = prefill_full(cfg, params, batch, max_seq)
     return logits[:, -1], caches
 
 

@@ -7,6 +7,7 @@ from .linear import (
     linear_apply,
     linear_flops,
     linear_init,
+    plan_context,
     planned_layer,
     planned_path_index,
 )
@@ -34,7 +35,7 @@ from .ssm import SSMSpec, SSMState, init_ssm_state, ssm_apply, ssm_init
 
 __all__ = [
     "LinearSpec", "TTConfig", "install_plan", "linear_apply", "linear_flops",
-    "linear_init", "planned_layer", "planned_path_index",
+    "linear_init", "plan_context", "planned_layer", "planned_path_index",
     "AttentionSpec", "KVCache", "attention_apply", "attention_init",
     "init_kv_cache",
     "EmbeddingSpec", "embedding_apply", "embedding_init", "head_apply",

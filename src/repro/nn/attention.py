@@ -185,18 +185,27 @@ def attention_apply(
     x: jax.Array,                     # (B, S, D)
     positions: Optional[jax.Array] = None,
     cache: Optional[KVCache] = None,
-    cache_pos: Optional[jax.Array] = None,   # scalar: #tokens already cached
+    cache_pos: Optional[jax.Array] = None,   # () or (B,): #tokens cached
 ) -> tuple[jax.Array, Optional[KVCache]]:
     """Returns (output, updated_cache).
 
     Prefill/train: ``cache is None`` — full-sequence chunked attention.
     Decode: ``cache`` given, ``x`` is (B, 1, D); new KV written at
-    ``cache_pos`` and attention runs over the valid prefix.
+    ``cache_pos`` and attention runs over the valid prefix.  A (B,)
+    ``cache_pos`` gives each lane its own write position and valid
+    horizon — the continuous-batching decode form, where every slot of
+    the fixed-width batch sits at a different sequence offset.  Each
+    lane's output depends only on that lane's (cache, token, position),
+    so slot contents never leak across requests.
     """
     b, s, _ = x.shape
     if positions is None:
         base = cache_pos if cache_pos is not None else 0
-        positions = base + jnp.arange(s)[None, :]
+        base = jnp.asarray(base)
+        if base.ndim == 1:
+            positions = base[:, None] + jnp.arange(s)[None, :]
+        else:
+            positions = base + jnp.arange(s)[None, :]
         positions = jnp.broadcast_to(positions, (b, s))
 
     q = linear_apply(spec.q_spec, params["wq"], x).reshape(b, s, spec.n_heads, spec.head_dim)
@@ -221,6 +230,11 @@ def attention_apply(
         # attend over the local (just-computed) K/V — identical numerics,
         # no per-token cache round-trips
         idx = cache_pos if cache_pos is not None else 0
+        if jnp.asarray(idx).ndim == 1:
+            raise ValueError(
+                "per-lane (B,) cache_pos is decode-only; prefill writes "
+                "one contiguous prompt per call (the serve scheduler "
+                "prefills each request at batch 1)")
         ck = jax.lax.dynamic_update_slice_in_dim(
             cache.k, k.astype(cache.k.dtype), idx, axis=1)
         cv = jax.lax.dynamic_update_slice_in_dim(
@@ -229,8 +243,23 @@ def attention_apply(
         out = _chunked_attention(q, k, v, spec.causal, spec.q_chunk)
     else:
         idx = cache_pos if cache_pos is not None else 0
-        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), idx, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), idx, axis=1)
+        idx = jnp.asarray(idx)
+        kv_pos = jnp.arange(cache.k.shape[1])
+        if idx.ndim == 1:
+            # per-lane positions: one-hot write (bit-exact equivalent of
+            # a per-lane dynamic_update_slice) + per-lane valid horizon
+            sel = kv_pos[None, :] == idx[:, None]                # (B, S)
+            ck = jnp.where(sel[:, :, None, None], k.astype(cache.k.dtype),
+                           cache.k)
+            cv = jnp.where(sel[:, :, None, None], v.astype(cache.v.dtype),
+                           cache.v)
+            vmask = (kv_pos[None, :] <= idx[:, None])[:, None, None, None, :]
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), idx, axis=1)
+            vmask = (kv_pos <= idx)[None, None, None, None, :]
         new_cache = KVCache(ck, cv)
         hkv = spec.n_kv_heads
         g = spec.n_heads // hkv
@@ -240,8 +269,7 @@ def attention_apply(
         # fp32 cache cast — fp32 lives only in the score accumulator)
         scores = jnp.einsum("bqghd,bkhd->bghqk", qg, ck,
                             preferred_element_type=jnp.float32) * scale
-        valid = jnp.arange(cache.k.shape[1]) <= idx
-        scores = jnp.where(valid[None, None, None, None, :], scores, _NEG_INF)
+        scores = jnp.where(vmask, scores, _NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bghqk,bkhd->bqghd", probs.astype(cv.dtype), cv)
         out = out.reshape(b, 1, spec.n_heads, spec.head_dim)

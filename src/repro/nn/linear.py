@@ -12,10 +12,11 @@ memoised per network signature, so scan/jit tracing pays it once.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import math
-from typing import Optional, Sequence
+from typing import Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -194,6 +195,28 @@ def install_plan(plan, *, force_backend: Optional[str] = None) -> None:
 def planned_layer(name: str):
     """The installed LayerPlan for a projection, or None."""
     return _PLAN.get(name)
+
+
+@contextlib.contextmanager
+def plan_context(plan, *, force_backend: Optional[str] = None) -> Iterator[None]:
+    """Temporarily install ``plan`` (``None`` = run unplanned), restoring
+    whatever was installed before on exit.
+
+    This is the per-*phase* install primitive of the serve scheduler: the
+    prefill stream traces under the prefill plan, the decode stream under
+    the decode plan, and the boundary is a context switch rather than a
+    global mutation the caller has to undo.  Tracing is lazy, so only
+    calls that trace a new shape inside the context bake the plan; jit
+    caches from earlier traces are (deliberately) untouched — switch
+    plans before the first trace of a shape, as with ``install_plan``.
+    """
+    saved = dict(_PLAN)
+    install_plan(plan, force_backend=force_backend)
+    try:
+        yield
+    finally:
+        _PLAN.clear()
+        _PLAN.update(saved)
 
 
 def _has_pallas_backward(lp) -> bool:

@@ -8,6 +8,7 @@ through the planned kernel backend.  Format spec: ``docs/plan_format.md``.
 
 from .schema import (
     BACKENDS,
+    PHASES,
     PLAN_FORMAT_VERSION,
     SUPPORTED_VERSIONS,
     TILING_MODES,
@@ -29,17 +30,19 @@ from .compiler import (
 from .executor import (
     as_candidate_path,
     execution_log,
+    execution_stream,
     planned_tt_linear,
     record_execution,
     reset_execution_log,
 )
 
 __all__ = [
-    "BACKENDS", "PLAN_FORMAT_VERSION", "SUPPORTED_VERSIONS", "TILING_MODES",
+    "BACKENDS", "PHASES", "PLAN_FORMAT_VERSION", "SUPPORTED_VERSIONS",
+    "TILING_MODES",
     "BackwardOp",
     "ExecutionPlan", "LayerPlan", "Tiling", "load_plan", "migrate_plan_json",
     "base_name", "batch_dim", "check_plan_for_config", "compile_plan",
     "streaming_fits", "validate_plan",
-    "as_candidate_path", "execution_log", "planned_tt_linear",
-    "record_execution", "reset_execution_log",
+    "as_candidate_path", "execution_log", "execution_stream",
+    "planned_tt_linear", "record_execution", "reset_execution_log",
 ]

@@ -45,6 +45,7 @@ from repro.core.tensor_network import Node, TensorNetwork
 
 from .schema import (
     BACKENDS,
+    PHASES,
     TILING_MODES,
     BackwardOp,
     ExecutionPlan,
@@ -369,18 +370,32 @@ def validate_plan(
     return problems
 
 
-def check_plan_for_config(plan, arch: str, cfg) -> list[str]:
+def check_plan_for_config(plan, arch: str, cfg,
+                          *, phase: Optional[str] = None) -> list[str]:
     """Driver-side guard: is ``plan`` installable for (arch, cfg)?
 
     Combines the arch provenance check with :func:`validate_plan` over
     the model's actual tensorized projections.  LLM layer names collide
     across architectures (every transformer has an ``attn.wq``), so name
     matching alone would let a foreign plan install silently.
+
+    ``phase`` additionally asserts the plan's serving-phase hint: a plan
+    stamped ``"decode"`` installed as the prefill half of a pair (or vice
+    versa) is flagged.  Phase-agnostic plans (``phase == ""``) install
+    under any phase.
     """
     problems = []
     if plan.arch and plan.arch != arch:
         problems.append(
             f"plan was emitted for arch {plan.arch!r}, not {arch!r}")
+    if phase is not None:
+        if phase not in PHASES:
+            raise ValueError(f"unknown phase {phase!r}; have {PHASES}")
+        if plan.phase and phase and plan.phase != phase:
+            problems.append(
+                f"plan is a {plan.phase} plan but would install as the "
+                f"{phase} half of the pair (swapped --plan-prefill/"
+                "--plan-decode?)")
     from repro.dse_cli import model_dse_layers
 
     try:
@@ -403,6 +418,7 @@ def compile_plan(
     backend: str = "auto",
     total_latency_s: Optional[float] = None,
     tilings: str = "heuristic",
+    phase: str = "",
     tuner=None,
 ) -> ExecutionPlan:
     """Compile a DSE result into an installable :class:`ExecutionPlan`.
@@ -422,9 +438,17 @@ def compile_plan(
     persistent cache, so a warm cache compiles without any measurement.
     Backend selection and backward-op tilings stay heuristic — the
     executor is unchanged either way.
+
+    ``phase`` stamps the plan's serving-phase hint (``"prefill"`` /
+    ``"decode"``; default phase-agnostic) — ``repro.dse
+    --emit-plan-pair`` compiles one plan per phase, searched at that
+    phase's token count, and the serve driver checks the stamp before
+    installing.
     """
     if backend != "auto" and backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; have {('auto',) + BACKENDS}")
+    if phase not in PHASES:
+        raise ValueError(f"unknown phase {phase!r}; have {PHASES}")
     if tilings not in TILING_MODES:
         raise ValueError(
             f"unknown tilings mode {tilings!r}; have {TILING_MODES}")
@@ -491,4 +515,5 @@ def compile_plan(
                          else total_latency_s),
         hardware=hw,
         tilings=tilings,
+        phase=phase,
     )

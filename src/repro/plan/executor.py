@@ -37,9 +37,10 @@ assert *which* path/dataflow/kernel actually executed, in which autodiff
 
 from __future__ import annotations
 
+import contextlib
 import functools
 import math
-from typing import Optional, Sequence
+from typing import Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +59,11 @@ from .schema import BackwardOp, LayerPlan
 
 _EXEC_LOG: list[dict] = []
 
+#: serving-stream tag stack (``execution_stream``): records appended
+#: inside the context carry ``stream`` = the innermost tag, so the serve
+#: scheduler's per-phase plan switching is assertable from the log
+_STREAM: list[str] = []
+
 
 def reset_execution_log() -> None:
     _EXEC_LOG.clear()
@@ -66,6 +72,24 @@ def reset_execution_log() -> None:
 def execution_log() -> tuple[dict, ...]:
     """Records of planned executions since the last reset (trace-time)."""
     return tuple(_EXEC_LOG)
+
+
+@contextlib.contextmanager
+def execution_stream(name: str) -> Iterator[None]:
+    """Tag every execution record traced inside with ``stream=name``.
+
+    The serve engine wraps each prefill/decode call in
+    ``execution_stream("prefill"/"decode")`` so the log distinguishes
+    which *serving stream* a contraction was traced under — orthogonal
+    to the autodiff ``phase`` (fwd/bwd) the record already carries.
+    Under ``jit`` a record appears once per trace, so the tag marks the
+    stream that *first* traced the shape.
+    """
+    _STREAM.append(str(name))
+    try:
+        yield
+    finally:
+        _STREAM.pop()
 
 
 def record_execution(
@@ -94,6 +118,7 @@ def record_execution(
         "path_steps": lp.path_steps if path_steps is None else path_steps,
         "tokens": tokens,
         "phase": phase,
+        "stream": _STREAM[-1] if _STREAM else "",
         "tiling": (lp.tiling if tiling is None else tiling).to_json(),
     }
     if wrt is not None:

@@ -46,6 +46,14 @@ BACKENDS = ("jnp", "tt_gemm", "streaming_tt")
 #: of the empirical autotuner (``repro.tune``) — provenance, not behavior
 TILING_MODES = ("heuristic", "measured")
 
+#: serving phase the plan was searched for: ``""`` (phase-agnostic —
+#: every pre-pair plan), ``"prefill"`` (prompt-token batch sizes) or
+#: ``"decode"`` (per-step token counts).  Optional wire field (absent =
+#: ``""``), so existing v3 readers stay compatible.  The serve driver
+#: refuses to install a plan under the wrong phase
+#: (``check_plan_for_config(..., phase=...)``).
+PHASES = ("", "prefill", "decode")
+
 _DATAFLOWS = ("IS", "OS", "WS")
 
 
@@ -245,6 +253,9 @@ class ExecutionPlan:
     #: compiler's analytic heuristic.  Optional wire field (absent =
     #: ``"heuristic"``), so v3 readers stay compatible.
     tilings: str = "heuristic"
+    #: serving-phase hint (see :data:`PHASES`) — ``--emit-plan-pair``
+    #: stamps the two halves so drivers can refuse a swapped pair
+    phase: str = ""
     version: int = PLAN_FORMAT_VERSION
 
     def __post_init__(self) -> None:
@@ -256,6 +267,9 @@ class ExecutionPlan:
             raise ValueError(
                 f"unknown tilings provenance {self.tilings!r}; "
                 f"have {TILING_MODES}")
+        if self.phase not in PHASES:
+            raise ValueError(
+                f"unknown phase {self.phase!r}; have {PHASES}")
         if self.hardware is not None and not isinstance(self.hardware,
                                                         HardwareConfig):
             raise ValueError(
@@ -289,6 +303,7 @@ class ExecutionPlan:
             "hardware": (self.hardware.to_json()
                          if self.hardware is not None else None),
             "objective": self.objective,
+            "phase": self.phase,
             "strategy": self.strategy,
             "tilings": self.tilings,
             "tokens": self.tokens,
@@ -319,6 +334,7 @@ class ExecutionPlan:
             hardware=(HardwareConfig.from_json(hardware)
                       if hardware is not None else None),
             tilings=str(d.get("tilings", "heuristic")),
+            phase=str(d.get("phase", "")),
             version=PLAN_FORMAT_VERSION,
         )
 

@@ -1,0 +1,26 @@
+"""Production serving loop: request queue, continuous batching, and
+phase-specialized execution plans.
+
+See ``docs/serving.md`` for the architecture: requests flow through a
+FIFO ready queue into a batch-1 *prefill stream* (under the prefill
+plan), are slot-written into a fixed-width decode cache, and advance one
+token per tick in the *decode stream* (under the decode plan).
+"""
+
+from .engine import ServeEngine
+from .metrics import percentile, summarize
+from .request import (
+    Completion,
+    Request,
+    load_trace,
+    save_trace,
+    synthetic_trace,
+)
+from .scheduler import SCHEDULES, Scheduler, ServePolicy, ServeResult
+
+__all__ = [
+    "ServeEngine",
+    "Scheduler", "ServePolicy", "ServeResult", "SCHEDULES",
+    "Request", "Completion", "synthetic_trace", "load_trace", "save_trace",
+    "percentile", "summarize",
+]
