@@ -1,0 +1,82 @@
+"""BENCH_search — guided-vs-exhaustive quality/efficiency trajectory.
+
+Writes ``results/benchmarks/BENCH_search.json``: per arch, the full
+VU9P-space exhaustive co-search optimum next to the budgeted guided
+search — evaluation counts, the eval at which the optimum was found,
+the latency gap, and whether the acceptance bar holds (within 2% of the
+exhaustive best at <= 25% of the exhaustive evaluation count; on
+current models the guided search finds the *exact* optimum).  Also
+records multi-seed robustness so a lucky seed cannot mask a quality
+regression.
+
+  PYTHONPATH=src python -m benchmarks.run --only bench_search
+"""
+
+from __future__ import annotations
+
+from repro.core import global_search
+from repro.dse_cli import dse_problems, model_layer_paths
+from repro.hw import ArchSpace, get_target
+from repro.search import DEFAULT_BUDGET_FRACTION, guided_search
+
+from .common import emit, timed
+
+ARCHS = ["resnet18/cifar10", "tt-lm-100m"]
+TOP_K = 4
+SEEDS = (0, 1, 2, 3)
+
+
+def run() -> list[dict]:
+    rows = []
+    base = get_target("fpga_vu9p")
+    cands = ArchSpace(base=base).candidates()
+    for arch in ARCHS:
+        named, _ = dse_problems(arch)
+        layer_paths = model_layer_paths(named, TOP_K)
+
+        exhaustive, exhaustive_s = timed(
+            global_search, layer_paths, base, hw_space=cands, repeat=1)
+
+        seed_rows = []
+        for seed in SEEDS:
+            guided, guided_s = timed(
+                guided_search, layer_paths, base, hw_space=cands,
+                seed=seed, repeat=1)
+            gap_pct = 100.0 * (guided.total_latency_s /
+                               exhaustive.total_latency_s - 1.0)
+            seed_rows.append({
+                "seed": seed,
+                "evals": guided.evals,
+                "found_at_eval": guided.found_at_eval,
+                "latency_s": guided.total_latency_s,
+                "gap_pct": gap_pct,
+                "chosen_arch": guided.hw.name,
+                "archs_visited": len(guided.hw_candidates),
+                "wall_s": guided_s,
+            })
+        worst_gap = max(r["gap_pct"] for r in seed_rows)
+        worst_evals = max(r["evals"] for r in seed_rows)
+        rows.append({
+            "arch": arch,
+            "n_layers": len(layer_paths),
+            "hw_space_size": len(cands),
+            "exhaustive_evals": exhaustive.evals,
+            "exhaustive_latency_s": exhaustive.total_latency_s,
+            "exhaustive_wall_s": exhaustive_s,
+            "budget_fraction": DEFAULT_BUDGET_FRACTION,
+            "guided_worst_gap_pct": worst_gap,
+            "guided_worst_evals": worst_evals,
+            "guided_worst_eval_fraction": worst_evals / exhaustive.evals,
+            "meets_bar": (worst_gap <= 2.0 and
+                          worst_evals <= 0.25 * exhaustive.evals),
+            "seeds": seed_rows,
+        })
+    emit("BENCH_search", rows,
+         keys=["arch", "n_layers", "hw_space_size", "exhaustive_evals",
+               "guided_worst_evals", "guided_worst_eval_fraction",
+               "guided_worst_gap_pct", "meets_bar"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

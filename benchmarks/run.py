@@ -17,6 +17,7 @@ import traceback
 from . import (
     bench_dse,
     bench_dse_overhead,
+    bench_search,
     bench_plan_exec,
     bench_serve_wallclock,
     fig3_paths,
@@ -41,6 +42,7 @@ SUITES = {
     "dse_overhead": bench_dse_overhead.run,
     "plan_exec": bench_plan_exec.run,
     "bench_dse": bench_dse.run,
+    "bench_search": bench_search.run,
     "bench_serve": bench_serve_wallclock.run,
 }
 

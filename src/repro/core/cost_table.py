@@ -321,6 +321,23 @@ def build_cost_table_vectorized(
     return build_cost_tables(layer_paths, hw, partitionings, dataflows).seconds
 
 
+def table_cells(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    partitionings: Sequence[Partitioning] = ALL_PARTITIONINGS,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+) -> int:
+    """Number of T[l, p, c, d] cells one architecture's table holds.
+
+    The evaluation-accounting unit of the guided search: an exhaustive
+    co-search reads ``len(space) * table_cells(...)`` cells, a budgeted
+    one stops early.  Counting cells (not batched GEMM evaluations, which
+    dedup across repeated layers) keeps the unit comparable between the
+    exhaustive and guided drivers regardless of layer dedup.
+    """
+    per_layer = len(partitionings) * len(dataflows)
+    return sum(len(paths) * per_layer for paths in layer_paths)
+
+
 # ---------------------------------------------------------------------------
 # training cost tables: fwd + bwd + grad-update (paper's training objective)
 # ---------------------------------------------------------------------------

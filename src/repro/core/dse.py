@@ -83,8 +83,18 @@ class DSEResult:
     #: candidate under ``hw_space=``, else the fixed target)
     hw: HardwareConfig | None = None
     #: per-candidate outcomes when ``hw_space=`` was searched (aligned
-    #: with the candidate list; empty for fixed-target searches)
+    #: with the candidate list for exhaustive searches; the *visited*
+    #: candidates, in refinement order, for guided searches)
     hw_candidates: tuple[HwCandidateResult, ...] = ()
+    #: search provenance: ``"exhaustive"`` (Algorithm 1's full sweep) or
+    #: ``"guided"`` (the budgeted explorer of ``repro.search``)
+    search: str = "exhaustive"
+    #: cost-model evaluations performed — unique (arch, layer, path,
+    #: partitioning, dataflow) cells read.  Exhaustive searches evaluate
+    #: every cell of every candidate; guided searches stop at the budget.
+    evals: int = 0
+    #: the evaluation count at which the returned optimum was first found
+    found_at_eval: int = 0
 
     @property
     def per_layer_latency(self) -> tuple[float, ...]:
@@ -232,6 +242,7 @@ def _global_search_hw(
     train_weights,
     hw_tables,
     hw_train_tables,
+    calibration: Mapping | None = None,
 ) -> DSEResult:
     """Outer architecture loop: per-candidate argmin, best candidate wins.
 
@@ -273,6 +284,14 @@ def _global_search_hw(
         tables = [t.seconds for t in
                   build_cost_tables_hw(layer_paths, hw_space, all_parts,
                                        dataflows)]
+    if calibration is not None:
+        # measured rescale per candidate (ROADMAP gap c, closed): the
+        # measured/analytic disagreement is a property of the cost model
+        # vs the machine, so the same per-(shape-bucket, dataflow) scales
+        # apply to every candidate's analytic table
+        tables = [apply_calibration(t, calibration, dataflows,
+                                    layer_paths=layer_paths)
+                  for t in tables]
 
     candidates: list[HwCandidateResult] = []
     best_cost = float("inf")
@@ -287,8 +306,11 @@ def _global_search_hw(
             best = (i, strategy, choices)
     assert best is not None
     i, strategy, choices = best
+    n_evals = sum(len(t) for t in tables)
     return DSEResult(strategy, choices, best_cost, tables[i], objective,
-                     hw=hw_space[i], hw_candidates=tuple(candidates))
+                     hw=hw_space[i], hw_candidates=tuple(candidates),
+                     search="exhaustive", evals=n_evals,
+                     found_at_eval=n_evals)
 
 
 def _normalize_calibration(
@@ -313,18 +335,53 @@ def _normalize_calibration(
 
 def apply_calibration(
     table: Mapping[tuple[int, int, Partitioning, Dataflow], float],
-    calibration: Mapping,
+    calibration,
     dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+    *,
+    layer_paths: Sequence[Sequence[CandidatePath]] | None = None,
 ) -> dict[tuple[int, int, Partitioning, Dataflow], float]:
-    """Rescale a cost table per dataflow by measured/analytic factors.
+    """Rescale a cost table by measured/analytic factors.
 
-    ``calibration`` maps dataflow (``Dataflow`` or its string value) to a
-    positive scale — typically ``repro.tune.measured_calibration``'s
-    geometric-mean measured/analytic ratio per dataflow.  A uniform table
-    cannot move any argmin; *relative* per-dataflow disagreement between
-    the analytic model and the machine can, which is exactly the signal
-    wall-clock measurements carry.
+    ``calibration`` is either
+
+    - a mapping from dataflow (``Dataflow`` or its string value) to a
+      positive scale — ``repro.tune.measured_calibration``'s geometric-
+      mean measured/analytic ratio per dataflow (PR 5's flat model), or
+    - a shape-aware correction model (``repro.tune.CostCorrection`` —
+      anything exposing ``scale(M, K, N, dataflow)``), fit from the
+      persistent tuning cache per (GEMM-shape bucket, dataflow).  This
+      form needs ``layer_paths`` to resolve each table cell's dominant
+      GEMM shape.
+
+    A uniform table cannot move any argmin; *relative* disagreement
+    between the analytic model and the machine can, which is exactly the
+    signal wall-clock measurements carry.
     """
+    if not isinstance(calibration, Mapping) and hasattr(calibration, "scale"):
+        if layer_paths is None:
+            raise ValueError(
+                "a shape-aware correction model rescales per dominant GEMM "
+                "shape; pass layer_paths so each (layer, path) cell can be "
+                "resolved to its shape bucket")
+        dom: dict[tuple[int, int], tuple[int, int, int]] = {}
+        for l, paths in enumerate(layer_paths):
+            for p, path in enumerate(paths):
+                g = max(path.gemms, key=lambda g: g.macs)
+                dom[(l, p)] = (int(g.M), int(g.K), int(g.N))
+        scales: dict[tuple[tuple[int, int, int], Dataflow], float] = {}
+        out = {}
+        for k, v in table.items():
+            shape = dom[k[:2]]
+            s = scales.get((shape, k[3]))
+            if s is None:
+                s = float(calibration.scale(*shape, k[3]))
+                if not s > 0:
+                    raise ValueError(
+                        f"correction scale for shape {shape} / {k[3].value} "
+                        f"must be positive, got {s!r}")
+                scales[(shape, k[3])] = s
+            out[k] = v * s
+        return out
     cal = _normalize_calibration(calibration, dataflows)
     return {k: v * cal.get(k[3], 1.0) for k, v in table.items()}
 
@@ -353,14 +410,15 @@ def global_search(
     e.g. the EDP table from ``cost_table.CostTables.edp``); by default the
     latency table is built with the selected ``engine``.
 
-    ``calibration`` rescales the (built or supplied) cost table per
-    dataflow by measured/analytic factors (:func:`apply_calibration`)
-    before the argmin — the measured-latency feedback loop of
-    ``repro.tune``: when wall-clock measurements rank dataflows
-    differently than the analytic model, the argmin genuinely moves.
-    Supported for fixed-target inference searches; the training
-    decomposition and the architecture co-search are still analytic-only
-    (open items in ROADMAP.md).
+    ``calibration`` rescales the (built or supplied) cost table by
+    measured/analytic factors (:func:`apply_calibration`) before the
+    argmin — the measured-latency feedback loop of ``repro.tune``: when
+    wall-clock measurements rank dataflows (or shape buckets, for a
+    ``CostCorrection`` model) differently than the analytic model, the
+    argmin genuinely moves.  Composes with fixed-target *and*
+    architecture co-searches (each candidate's table is rescaled before
+    its argmin); the training decomposition is still analytic-only (open
+    item in ROADMAP.md).
 
     ``objective="train-latency"`` jointly optimizes the forward *and*
     backward passes: per cell, the cost is ``w_f * fwd + w_b * bwd +
@@ -396,16 +454,10 @@ def global_search(
                 "phase table — combine_phase_tables(prefill, decode, "
                 "w_decode=gen/slots) over replay_paths-aligned candidates "
                 "(repro.dse --objective throughput builds it)")
-    if calibration is not None:
-        if hw_space is not None:
-            raise ValueError(
-                "calibration composes with fixed-target searches only; "
-                "per-candidate measured calibration of an architecture "
-                "co-search is an open item (ROADMAP.md)")
-        if objective == "train-latency":
-            raise ValueError(
-                "calibration rescales the inference table; the training "
-                "decomposition is analytic-only for now (ROADMAP.md)")
+    if calibration is not None and objective == "train-latency":
+        raise ValueError(
+            "calibration rescales the inference table; the training "
+            "decomposition is analytic-only for now (ROADMAP.md)")
     if hw_space is not None:
         if table is not None or train_tables is not None:
             raise ValueError(
@@ -431,7 +483,8 @@ def global_search(
                 "it would be silently ignored")
         return _global_search_hw(
             layer_paths, hw_space, strategy_space, dataflows, objective,
-            layer_backwards, train_weights, hw_tables, hw_train_tables)
+            layer_backwards, train_weights, hw_tables, hw_train_tables,
+            calibration)
     if hw_tables is not None or hw_train_tables is not None:
         raise ValueError("hw_tables / hw_train_tables require hw_space")
 
@@ -467,11 +520,14 @@ def global_search(
             layer_paths, hw, all_parts, dataflows, simulate_fn, engine
         )
     if calibration is not None:
-        table = apply_calibration(table, calibration, dataflows)
+        table = apply_calibration(table, calibration, dataflows,
+                                  layer_paths=layer_paths)
 
     strategy, choices, best_cost = _hierarchical_argmin(
         layer_paths, table, strategy_space, dataflows, train)
-    return DSEResult(strategy, choices, best_cost, table, objective, hw=hw)
+    return DSEResult(strategy, choices, best_cost, table, objective, hw=hw,
+                     search="exhaustive", evals=len(table),
+                     found_at_eval=len(table))
 
 
 def brute_force_search(

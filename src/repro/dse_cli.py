@@ -38,6 +38,7 @@ from repro.core import (
     find_topk_paths,
     global_search,
 )
+from repro.core.cost_table import table_cells as _table_cells
 from repro.core.dse import build_cost_table
 from repro.hw import ArchSpace, get_target, list_targets
 from repro.hw import HW_TARGETS  # noqa: F401  (re-export; registry is repro.hw)
@@ -48,6 +49,7 @@ OBJECTIVES = ("latency", "edp", "throughput")
 MODES = ("infer", "train", "both")
 HW_SEARCH_MODES = ("off", "budget")
 TUNE_MODES = ("off", "cache", "measure")
+SEARCH_MODES = ("exhaustive", "guided")
 
 #: dominant-GEMM shapes measured for the --tune calibration table (per
 #: dataflow, at the heuristic tiling; heaviest shapes first)
@@ -213,6 +215,9 @@ def run_dse(
     serve_gen: int = 128,
     serve_slots: int = 8,
     decode_tokens: Optional[int] = None,
+    search: str = "exhaustive",
+    search_budget: Optional[int] = None,
+    search_seed: int = 0,
 ) -> dict:
     """Run Algorithm 1 end-to-end; returns the JSON-serializable report.
 
@@ -237,21 +242,29 @@ def run_dse(
     and the resulting calibration rescales the analytic table before the
     argmin.  The report gains a ``tune`` section; with ``--emit-plan``
     the plan additionally carries measured kernel tilings.
+
+    ``search="guided"`` replaces the exhaustive sweep with the budgeted
+    explorer of ``repro.search`` (``search_budget`` cost-model
+    evaluations, ``search_seed`` for the proposal stream); the report's
+    ``search`` section records the provenance (evals, found-at-eval,
+    the exhaustive count it avoided).
     """
     if mode == "both":
         _check_train_compatible(objective, engine)  # fail before any search
         _check_tune_compatible(tune, "both", objective, hw_search)
-        infer, _, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens,
-                                     smoke, engine, "infer", hw_search,
-                                     hw_budget)
-        train, _, _, _, _ = _run_dse(arch, hw, top_k, objective, tokens,
-                                     smoke, engine, "train", hw_search,
-                                     hw_budget)
+        infer, _, _, _, _, _ = _run_dse(
+            arch, hw, top_k, objective, tokens, smoke, engine, "infer",
+            hw_search, hw_budget, search=search, search_budget=search_budget,
+            search_seed=search_seed)
+        train, _, _, _, _, _ = _run_dse(
+            arch, hw, top_k, objective, tokens, smoke, engine, "train",
+            hw_search, hw_budget, search=search, search_budget=search_budget,
+            search_seed=search_seed)
         return _both_report(infer, train)
-    report, _, _, _, tuner = _run_dse(arch, hw, top_k, objective, tokens,
-                                      smoke, engine, mode, hw_search,
-                                      hw_budget, tune, tune_cache,
-                                      serve_gen, serve_slots, decode_tokens)
+    report, _, _, _, tuner, _ = _run_dse(
+        arch, hw, top_k, objective, tokens, smoke, engine, mode, hw_search,
+        hw_budget, tune, tune_cache, serve_gen, serve_slots, decode_tokens,
+        search, search_budget, search_seed)
     _save_tuner(tuner)
     return report
 
@@ -317,6 +330,9 @@ def run_dse_plan(
     serve_slots: int = 8,
     decode_tokens: Optional[int] = None,
     phase: str = "",
+    search: str = "exhaustive",
+    search_budget: Optional[int] = None,
+    search_seed: int = 0,
 ):
     """Run the DSE and compile its result into an ExecutionPlan.
 
@@ -351,14 +367,16 @@ def run_dse_plan(
     if mode == "both":
         _check_train_compatible(objective, engine)  # fail before any search
         _check_tune_compatible(tune, "both", objective, hw_search)
-        infer_report, _, _, _, _ = _run_dse(
+        infer_report, _, _, _, _, _ = _run_dse(
             arch, hw, top_k, objective, tokens, smoke, engine, "infer",
-            hw_search, hw_budget)
+            hw_search, hw_budget, search=search, search_budget=search_budget,
+            search_seed=search_seed)
     plan_mode = "train" if mode in ("train", "both") else "infer"
-    report, named, res, plan_hw, tuner = _run_dse(
+    report, named, res, plan_hw, tuner, calibration = _run_dse(
         arch, hw, top_k, objective, tokens, smoke, engine, plan_mode,
         hw_search, hw_budget, tune, tune_cache,
-        serve_gen, serve_slots, decode_tokens)
+        serve_gen, serve_slots, decode_tokens,
+        search, search_budget, search_seed)
     plan = compile_plan(
         named, res, plan_hw,
         arch=arch,
@@ -375,12 +393,25 @@ def run_dse_plan(
         # latency landed in measured-rescaled units; divide the scale
         # back out so the plan's per-layer provenance stays in the same
         # analytic seconds as its total_latency_s (up to float rounding
-        # — (analytic * cal) / cal can differ from analytic by an ulp)
-        cal = report["tune"]["calibration"]
-        plan = dataclasses.replace(plan, layers=tuple(
-            dataclasses.replace(
-                lp, latency_s=lp.latency_s / cal.get(lp.dataflow, 1.0))
-            for lp in plan.layers))
+        # — (analytic * cal) / cal can differ from analytic by an ulp).
+        # The correction model scales per (shape bucket, dataflow), so
+        # each family's scale comes from its own choice's dominant GEMM.
+        from repro.plan.compiler import base_name
+        from repro.tune.variants import dominant_gemm
+
+        fam_choice = {}
+        for (inst_name, _), choice in zip(named, res.choices):
+            fam_choice.setdefault(base_name(inst_name), choice)
+
+        def _unscale(lp):
+            c = fam_choice[lp.name]
+            M, K, N = dominant_gemm(c.path)
+            return dataclasses.replace(
+                lp, latency_s=lp.latency_s / calibration.scale(
+                    M, K, N, lp.dataflow))
+
+        plan = dataclasses.replace(
+            plan, layers=tuple(_unscale(lp) for lp in plan.layers))
         # compilation may have measured additional (per-family) sweeps;
         # refresh the report's counters and persist the cache
         report["tune"]["n_measured"] = tuner.n_measured
@@ -392,8 +423,15 @@ def run_dse_plan(
     return report, plan
 
 
-def _hw_search_report(space: ArchSpace, res, base_cfg) -> dict:
-    """Per-candidate section of the report (sorted best-first)."""
+def _hw_search_report(space: ArchSpace, res, base_cfg,
+                      n_space: int) -> dict:
+    """Per-candidate section of the report (sorted best-first).
+
+    ``res.hw_candidates`` is the full space for an exhaustive co-search
+    and the *visited* (exactly refined) candidates for a guided one —
+    the guided driver always visits the base target first, so ``fixed``
+    is present either way.
+    """
     def row(cand) -> dict:
         return {
             **space.describe(cand.hw),
@@ -408,8 +446,10 @@ def _hw_search_report(space: ArchSpace, res, base_cfg) -> dict:
     chosen = next(c for c in res.hw_candidates if c.hw is res.hw)
     return {
         "mode": "budget",
+        "search": res.search,
         "mac_budget": space.mac_budget,
         "n_candidates": len(res.hw_candidates),
+        "n_space": n_space,
         "chosen": row(chosen),
         "fixed": row(fixed) if fixed is not None else None,
         "improvement_pct": (
@@ -435,10 +475,10 @@ def _check_tune_compatible(tune: str, mode: str, objective: str,
                            hw_search: str) -> None:
     """Reject combinations the measured-latency loop cannot honour yet.
 
-    The calibration rescales the inference latency table; composing it
-    with the training decomposition, the EDP objective or the per-
-    candidate tables of an architecture co-search are open items
-    (ROADMAP.md)."""
+    The calibration rescales the inference latency table — per candidate
+    under an architecture co-search (ROADMAP gap c, closed); composing
+    it with the training decomposition or the EDP objective are still
+    open items (ROADMAP.md)."""
     if tune == "off":
         return
     if tune not in TUNE_MODES:
@@ -451,10 +491,6 @@ def _check_tune_compatible(tune: str, mode: str, objective: str,
         raise ValueError(
             "--tune calibrates the latency objective; --objective "
             f"{objective} is analytic-only for now")
-    if hw_search != "off":
-        raise ValueError(
-            "--tune composes with fixed-target searches only; measured "
-            "calibration of --hw-search candidates is an open item")
 
 
 def _make_tuner(tune: str, tune_cache: Optional[str]):
@@ -486,15 +522,27 @@ def _run_dse(
     serve_gen: int = 128,
     serve_slots: int = 8,
     decode_tokens: Optional[int] = None,
+    search: str = "exhaustive",
+    search_budget: Optional[int] = None,
+    search_seed: int = 0,
 ):
     """Shared pipeline; returns (report, named_layers, DSEResult, hw_cfg,
-    tuner).
+    tuner, calibration).
 
     The returned hardware config is the one the plan should compile for:
     the co-searched winner under ``hw_search``, else the fixed target.
     The tuner is the live ``repro.tune.Autotuner`` when ``tune`` is on
     (``run_dse_plan`` hands it to the plan compiler for measured
-    tilings, then persists its cache), else ``None``.
+    tilings, then persists its cache), else ``None``; the calibration is
+    the fitted ``repro.tune.CostCorrection`` the search ran under
+    (``run_dse_plan`` divides its scales back out of plan latencies).
+
+    ``search="guided"`` routes the argmin through
+    ``repro.search.guided_search`` — a budgeted explorer over the same
+    cost tables (latency / train-latency objectives; EDP and throughput
+    tables are pre-combined and stay exhaustive).  With ``hw_search``
+    it replaces the exhaustive outer architecture loop; without it the
+    single target is refined exactly (same result, guided provenance).
 
     ``objective="throughput"`` optimizes serving tokens/s under a
     sustained continuous-batching load: each layer's cost becomes
@@ -532,6 +580,19 @@ def _run_dse(
                 "only")
         if engine == "scalar":
             raise ValueError("--hw-search requires the vectorized engine")
+    if search not in SEARCH_MODES:
+        raise KeyError(f"unknown search {search!r}; have {SEARCH_MODES}")
+    if search == "guided":
+        if objective != "latency":
+            raise ValueError(
+                "--search guided explores the latency (or train-latency) "
+                f"objective; the pre-combined --objective {objective} "
+                "table stays on the exhaustive path")
+        if engine == "scalar":
+            raise ValueError("--search guided requires the vectorized "
+                             "engine")
+    if search_budget is not None and search != "guided":
+        raise ValueError("search_budget requires search='guided'")
     _check_tune_compatible(tune, mode, objective, hw_search)
 
     named, tokens = dse_problems(arch, tokens, smoke)
@@ -555,13 +616,81 @@ def _run_dse(
         bwd_search_s = time.perf_counter() - t0
         path_search_s += bwd_search_s
 
+    # stage 2b — measured calibration (repro.tune): measure the model's
+    # dominant GEMM shapes per dataflow on this machine, fit the learned
+    # per-(shape-bucket, dataflow) correction from the cache, and rescale
+    # the analytic table(s) before the argmin.  Runs before the search
+    # stages because the co-search applies it per candidate (gap c).
+    tuner = None
+    tune_report = None
+    calibration = None
+    if tune != "off":
+        from repro.tune import (
+            fit_cost_correction,
+            gemm_work_items,
+            measured_calibration,
+        )
+
+        tuner = _make_tuner(tune, tune_cache)
+        t0 = time.perf_counter()
+        shapes = gemm_work_items(layer_paths,
+                                 max_shapes=TUNE_CALIBRATION_SHAPES)
+        flat_calibration = measured_calibration(shapes, tuner, hw_cfg)
+        # the learned correction: per (shape bucket, dataflow) geomean
+        # ratios, falling back to the flat per-dataflow scales above on
+        # sparse buckets.  The fit is pinned to the calibration shape
+        # set so a warm cache holding extra sweep entries still fits the
+        # identical model (bit-identical re-emission is CI-asserted).
+        calibration = fit_cost_correction(
+            tuner.cache, hw_cfg, device_kind=tuner.device_kind,
+            interpret=tuner.interpret, shapes=shapes)
+        tune_report = {
+            "mode": tune,
+            "cache": tuner.cache_path,
+            "device_kind": tuner.device_kind,
+            "interpret": tuner.interpret,
+            "n_calibration_shapes": len(shapes),
+            "calibration": flat_calibration,
+            "correction": calibration.describe(),
+            "n_measured": tuner.n_measured,
+            "n_cache_hits": tuner.n_cache_hits,
+            "n_cache_entries": len(tuner.cache),
+            "measure_s": time.perf_counter() - t0,
+        }
+
+    n_space = 1
     if hw_search != "off":
         # stage 2+3 joint: hw-batched tables + outer architecture loop
+        # (exhaustive), or the budgeted guided explorer (repro.search)
         from repro.core import build_cost_tables_hw, build_train_cost_tables_hw
 
         space = ArchSpace(base=hw_cfg, mac_budget=hw_budget)
         cands = space.candidates()
-        if mode == "train":
+        n_space = len(cands)
+        if search == "guided":
+            from repro.search import guided_search
+
+            t0 = time.perf_counter()
+            res = guided_search(
+                layer_paths, hw_cfg,
+                objective=("train-latency" if mode == "train"
+                           else "latency"),
+                hw_space=cands, budget=search_budget, seed=search_seed,
+                layer_backwards=layer_backwards, calibration=calibration)
+            argmin_s = time.perf_counter() - t0
+            # rebuild the winner's analytic tables for the report: the
+            # per-layer latencies below must stay in analytic seconds
+            # even when the argmin ran over a calibrated table
+            if mode == "train":
+                train_tables = build_train_cost_tables_hw(
+                    layer_paths, layer_backwards, (res.hw,), all_parts)[0]
+                tables = train_tables.fwd
+                table_build_s = train_tables.build_seconds
+            else:
+                tables = build_cost_tables_hw(layer_paths, (res.hw,),
+                                              all_parts)[0]
+                table_build_s = tables.build_seconds
+        elif mode == "train":
             trains = build_train_cost_tables_hw(
                 layer_paths, layer_backwards, cands, all_parts)
             table_build_s = trains[0].build_seconds
@@ -577,12 +706,13 @@ def _run_dse(
             table_build_s = per_hw[0].build_seconds
             t0 = time.perf_counter()
             res = global_search(layer_paths, hw_space=cands,
-                                hw_tables=[t.seconds for t in per_hw])
+                                hw_tables=[t.seconds for t in per_hw],
+                                calibration=calibration)
             argmin_s = time.perf_counter() - t0
             win = cands.index(res.hw)
             tables = per_hw[win]
         seconds_table = tables.seconds
-        hw_search_report = _hw_search_report(space, res, hw_cfg)
+        hw_search_report = _hw_search_report(space, res, hw_cfg, n_space)
     elif mode == "train":
         from repro.core import build_train_cost_tables
 
@@ -625,38 +755,20 @@ def _run_dse(
         else:
             obj_table = seconds_table
 
-    # stage 2b — measured calibration (repro.tune): measure the model's
-    # dominant GEMM shapes per dataflow on this machine and rescale the
-    # analytic table before the argmin
-    tuner = None
-    tune_report = None
-    calibration = None
-    if tune != "off":
-        from repro.tune import gemm_work_items, measured_calibration
-
-        tuner = _make_tuner(tune, tune_cache)
-        t0 = time.perf_counter()
-        shapes = gemm_work_items(layer_paths,
-                                 max_shapes=TUNE_CALIBRATION_SHAPES)
-        calibration = measured_calibration(shapes, tuner, hw_cfg)
-        tune_report = {
-            "mode": tune,
-            "cache": tuner.cache_path,
-            "device_kind": tuner.device_kind,
-            "interpret": tuner.interpret,
-            "n_calibration_shapes": len(shapes),
-            "calibration": calibration,
-            "n_measured": tuner.n_measured,
-            "n_cache_hits": tuner.n_cache_hits,
-            "n_cache_entries": len(tuner.cache),
-            "measure_s": time.perf_counter() - t0,
-        }
-
     # stage 3 — hierarchical global argmin over the chosen objective
     # (already folded into the outer architecture loop under hw search)
     if hw_search == "off":
         t0 = time.perf_counter()
-        if mode == "train":
+        if search == "guided":
+            from repro.search import guided_search
+
+            res = guided_search(
+                layer_paths, hw_cfg,
+                objective=("train-latency" if mode == "train"
+                           else "latency"),
+                budget=search_budget, seed=search_seed,
+                layer_backwards=layer_backwards, calibration=calibration)
+        elif mode == "train":
             res = global_search(layer_paths, hw_cfg,
                                 objective="train-latency",
                                 train_tables=train_tables)
@@ -715,6 +827,15 @@ def _run_dse(
         "strategy": res.strategy,
         "total_latency_s": total_latency,
         "total_objective": res.total_latency_s,
+        "search": {
+            "mode": res.search,
+            "budget": search_budget,
+            "seed": search_seed if search == "guided" else None,
+            "evals": res.evals,
+            "found_at_eval": res.found_at_eval,
+            "exhaustive_evals": n_space * _table_cells(layer_paths,
+                                                      all_parts),
+        },
         "n_layers": len(layers),
         "timings": {
             "path_search_s": path_search_s,
@@ -751,7 +872,7 @@ def _run_dse(
             "total_combined_s": res.total_latency_s,
         }
     return (report, named, res,
-            (res.hw if res.hw is not None else hw_cfg), tuner)
+            (res.hw if res.hw is not None else hw_cfg), tuner, calibration)
 
 
 # ---------------------------------------------------------------------------
@@ -777,6 +898,21 @@ def _build_parser() -> argparse.ArgumentParser:
     p.add_argument("--hw-budget", type=int, default=None, metavar="MACS",
                    help="MAC/DSP budget for --hw-search budget "
                         "(default: the base target's own PE count)")
+    p.add_argument("--search", default="exhaustive", choices=SEARCH_MODES,
+                   help="exhaustive: Algorithm 1's full sweep, optimal over "
+                        "the pruned space (default); guided: the budgeted "
+                        "evolutionary explorer (repro.search) over the same "
+                        "cost tables — exact per visited architecture, "
+                        "bounded by --search-budget evaluations; the report "
+                        "gains a search provenance section")
+    p.add_argument("--search-budget", type=int, default=None, metavar="N",
+                   help="evaluation budget for --search guided, in cost-"
+                        "table cells read (default: the full table for a "
+                        "fixed target, 25%% of the exhaustive count under "
+                        "--hw-search)")
+    p.add_argument("--search-seed", type=int, default=0, metavar="SEED",
+                   help="RNG seed of the guided proposal stream (same seed "
+                        "-> bit-identical result; default 0)")
     p.add_argument("--top-k", type=int, default=4, metavar="K",
                    help="candidate paths kept per layer (default 4)")
     p.add_argument("--objective", default="latency", choices=OBJECTIVES,
@@ -887,6 +1023,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 "is unservable in one engine")
     if args.hw_budget is not None and args.hw_search == "off":
         _build_parser().error("--hw-budget requires --hw-search budget")
+    if args.search_budget is not None and args.search != "guided":
+        _build_parser().error("--search-budget requires --search guided")
     if args.tune_cache is not None and args.tune == "off":
         _build_parser().error("--tune-cache requires --tune cache|measure")
     try:
@@ -896,6 +1034,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 objective=args.objective, smoke=args.smoke,
                 engine=args.engine, plan_backend=args.plan_backend,
                 mode="infer", tune=args.tune, tune_cache=args.tune_cache,
+                search=args.search, search_budget=args.search_budget,
+                search_seed=args.search_seed,
             )
             dec_tokens = (args.decode_tokens if args.decode_tokens is not None
                           else args.serve_slots)
@@ -934,6 +1074,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 serve_slots=args.serve_slots,
                 decode_tokens=args.decode_tokens,
                 phase=args.phase or "",
+                search=args.search,
+                search_budget=args.search_budget,
+                search_seed=args.search_seed,
             )
             plan.save(args.emit_plan)
             backends = sorted({lp.backend for lp in plan.layers})
@@ -960,6 +1103,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 serve_gen=args.serve_gen,
                 serve_slots=args.serve_slots,
                 decode_tokens=args.decode_tokens,
+                search=args.search,
+                search_budget=args.search_budget,
+                search_seed=args.search_seed,
             )
     except (KeyError, ValueError) as e:
         msg = e.args[0] if e.args else e

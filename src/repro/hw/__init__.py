@@ -22,10 +22,11 @@ from .targets import (
     list_targets,
     register_target,
 )
-from .space import ArchSpace
+from .space import ArchSpace, arch_coordinates
 
 __all__ = [
     "ArchSpace",
+    "arch_coordinates",
     "FPGA_VU9P",
     "HW_TARGETS",
     "HardwareConfig",

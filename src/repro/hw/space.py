@@ -27,7 +27,8 @@ than the fixed-target search (the guarantee
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+import math
+from typing import Iterator, Optional, Sequence
 
 from .config import HardwareConfig
 from .targets import FPGA_VU9P
@@ -182,3 +183,30 @@ class ArchSpace:
             "sram_output_kib": hw.sram_output_bytes // 1024,
             "dram_words_per_cycle": hw.dram_words_per_cycle,
         }
+
+
+def arch_coordinates(
+    hw_list: Sequence[HardwareConfig],
+) -> tuple[tuple[float, ...], ...]:
+    """Embed candidates in a metric space for neighborhood-based mutation.
+
+    One coordinate vector per candidate: (log2 PE rows, log2 PE cols,
+    input-SRAM fraction of the total buffer, log2 bandwidth tier).  The
+    searched knobs are all geometric (pow2 dims, bw halvings), so log2
+    makes "one grid step" a unit distance on each axis; the SRAM split is
+    already a fraction.  Guided mutation uses L1 distance in this space
+    to propose *adjacent* architectures instead of uniform jumps — the
+    cost surface is smooth along each knob (halving bandwidth roughly
+    doubles DRAM time), which is what makes local moves informative.
+    """
+    coords = []
+    for hw in hw_list:
+        total = hw.sram_input_bytes + hw.sram_output_bytes
+        coords.append((
+            math.log2(hw.pe_rows),
+            math.log2(hw.pe_cols),
+            hw.sram_input_bytes / total if total else 0.0,
+            math.log2(hw.dram_words_per_cycle)
+            if hw.dram_words_per_cycle > 0 else 0.0,
+        ))
+    return tuple(coords)

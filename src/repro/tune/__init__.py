@@ -31,10 +31,19 @@ from .cache import (
     CACHE_FORMAT,
     CACHE_VERSION,
     DEFAULT_CACHE_PATH,
+    KERNEL_MODULES,
     TuningCache,
     TuningEntry,
+    kernel_fingerprint,
     parse_variant,
     variant_key,
+)
+from .correction import (
+    MIN_BUCKET_SAMPLES,
+    SHAPE_BUCKET_LOG2_WIDTH,
+    CostCorrection,
+    fit_cost_correction,
+    shape_bucket,
 )
 from .measure import (
     default_interpret,
@@ -56,8 +65,11 @@ from .variants import (
 __all__ = [
     "TUNE_MODES", "Autotuner", "analytic_gemm_seconds", "gemm_work_items",
     "heuristic_blocks", "measured_calibration",
-    "CACHE_FORMAT", "CACHE_VERSION", "DEFAULT_CACHE_PATH", "TuningCache",
-    "TuningEntry", "parse_variant", "variant_key",
+    "CACHE_FORMAT", "CACHE_VERSION", "DEFAULT_CACHE_PATH", "KERNEL_MODULES",
+    "TuningCache", "TuningEntry", "kernel_fingerprint", "parse_variant",
+    "variant_key",
+    "MIN_BUCKET_SAMPLES", "SHAPE_BUCKET_LOG2_WIDTH", "CostCorrection",
+    "fit_cost_correction", "shape_bucket",
     "default_interpret", "device_kind", "measure_callable", "measure_gemm",
     "measure_streaming",
     "GEMM_BLOCK_CAPS", "STREAM_BLOCK_CAPS", "block_candidates",

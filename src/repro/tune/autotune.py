@@ -40,7 +40,7 @@ from repro.plan.compiler import (
 from repro.core.tensor_network import TensorNetwork
 
 from . import measure as _measure
-from .cache import TuningCache, TuningEntry, variant_key
+from .cache import TuningCache, TuningEntry, kernel_fingerprint, variant_key
 from .variants import (
     GEMM_BLOCK_CAPS,
     STREAM_BLOCK_CAPS,
@@ -73,6 +73,7 @@ class Autotuner:
         repeats: int = _measure.REPEATS,
         measure_gemm_fn=None,
         measure_streaming_fn=None,
+        kernel_fp: Optional[str] = None,
     ) -> None:
         if mode not in TUNE_MODES:
             raise ValueError(f"unknown tune mode {mode!r}; have {TUNE_MODES}")
@@ -83,6 +84,10 @@ class Autotuner:
                             else _measure.device_kind())
         self.interpret = (interpret if interpret is not None
                           else _measure.default_interpret())
+        # staleness guard (ROADMAP gap d): keys carry the kernel-source
+        # hash, so entries measured through edited kernels stop matching
+        self.kernel_fp = (kernel_fp if kernel_fp is not None
+                          else kernel_fingerprint())
         self.warmup = warmup
         self.repeats = repeats
         # injection points for tests (no real kernels, no real clocks)
@@ -102,7 +107,8 @@ class Autotuner:
 
     # -- keys --------------------------------------------------------------
     def _suffix(self) -> str:
-        return f"{self.device_kind}:{'interp' if self.interpret else 'native'}"
+        interp = "interp" if self.interpret else "native"
+        return f"{self.device_kind}:{interp}:k{self.kernel_fp}"
 
     def gemm_key(self, M: int, K: int, N: int, dataflow: str) -> str:
         return f"gemm:{M}x{K}x{N}:{dataflow}:{self._suffix()}"

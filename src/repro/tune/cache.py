@@ -18,15 +18,51 @@ round-trip property the plan schema guarantees, asserted by
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
-from typing import Mapping, Optional
+from typing import Mapping, Optional, Sequence
 
 CACHE_FORMAT = "repro.tuning_cache"
 CACHE_VERSION = 1
 
 #: default on-disk location (``repro.tune`` / ``repro.dse --tune``)
 DEFAULT_CACHE_PATH = os.path.join("results", "tuning_cache.json")
+
+#: kernel modules whose source participates in the cache key — a cached
+#: latency is a property of the *kernel implementation* as much as of the
+#: machine, so editing any of these must invalidate old measurements
+KERNEL_MODULES = (
+    "repro.kernels.ops",
+    "repro.kernels.tt_gemm",
+    "repro.kernels.streaming_tt",
+)
+
+
+def kernel_fingerprint(paths: Optional[Sequence[str]] = None) -> str:
+    """Short content hash of the kernel source files (staleness guard).
+
+    Measurements are taken *through* the kernels in
+    :data:`KERNEL_MODULES`; if any of their sources change, every cached
+    number is suspect.  Embedding this hash in the cache key makes stale
+    entries unreachable (they simply stop matching) rather than silently
+    replayed — ROADMAP gap (d).  ``paths`` overrides the file set for
+    tests.
+    """
+    if paths is None:
+        import importlib
+
+        paths = []
+        for mod_name in KERNEL_MODULES:
+            mod = importlib.import_module(mod_name)
+            if getattr(mod, "__file__", None):
+                paths.append(mod.__file__)
+    h = hashlib.sha1()
+    for p in sorted(paths):
+        with open(p, "rb") as f:
+            h.update(f.read())
+        h.update(b"\0")
+    return h.hexdigest()[:12]
 
 
 def variant_key(blocks: tuple[int, ...]) -> str:

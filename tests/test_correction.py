@@ -1,0 +1,253 @@
+"""Learned cost-correction: fit from synthetic caches with a *known*
+per-bucket ground truth, recovery within tolerance, and the fallback
+chain (bucket -> per-dataflow geomean -> 1.0) on sparse buckets.
+
+The fixtures plant measurements at exactly ``analytic * truth(bucket,
+dataflow)`` so the fitted geomeans are exact up to float rounding; noise
+variants check the geomean actually averages.  ``apply_calibration``
+dispatch for the model object (vs the flat mapping) is covered here
+too, including the layer_paths requirement and the positive-scale
+check.
+"""
+
+import math
+
+import pytest
+
+from repro.core import find_topk_paths, tt_linear_network
+from repro.core.cost_table import build_cost_table_vectorized
+from repro.core.dse import apply_calibration
+from repro.core.simulator import ALL_DATAFLOWS, ALL_PARTITIONINGS
+from repro.hw import FPGA_VU9P
+from repro.tune import (
+    CostCorrection,
+    MIN_BUCKET_SAMPLES,
+    SHAPE_BUCKET_LOG2_WIDTH,
+    TuningCache,
+    TuningEntry,
+    analytic_gemm_seconds,
+    fit_cost_correction,
+    heuristic_blocks,
+    shape_bucket,
+    variant_key,
+)
+from repro.tune.variants import dominant_gemm
+
+
+def _gemm_entry(M, K, N, dataflow, scale, device_kind="cpu",
+                interpret=True, at_heuristic=True, hw=FPGA_VU9P):
+    """Synthetic cache entry measuring ``analytic * scale`` seconds."""
+    blocks = heuristic_blocks(M, K, N) if at_heuristic else (1, 1, 1)
+    key = f"gemm:{M}x{K}x{N}:{dataflow}:{device_kind}:i:ktest"
+    return TuningEntry(
+        key=key, kind="gemm", backend="tt_gemm",
+        device_kind=device_kind, interpret=interpret,
+        problem={"M": M, "K": K, "N": N, "dataflow": dataflow},
+        measured_s={variant_key(blocks):
+                    analytic_gemm_seconds(M, K, N, dataflow, hw) * scale},
+    )
+
+
+def _cache(entries):
+    return TuningCache({e.key: e for e in entries})
+
+
+# ---------------------------------------------------------------------------
+# shape_bucket
+# ---------------------------------------------------------------------------
+
+def test_shape_bucket_quantizes_log2_volume():
+    assert shape_bucket(2, 2, 1) == 1        # log2(4)=2 -> bucket 1
+    assert shape_bucket(4, 4, 4) == 3        # log2(64)=6 -> bucket 3
+    # volumes within one 4x band share a bucket (2^4 and 2^5)
+    assert shape_bucket(4, 2, 2) == shape_bucket(8, 2, 2)
+    # a 4x volume step moves exactly one bucket
+    b = shape_bucket(64, 64, 64)
+    assert shape_bucket(256, 64, 64) == b + 1
+    with pytest.raises(ValueError, match="positive"):
+        shape_bucket(0, 4, 4)
+
+
+# ---------------------------------------------------------------------------
+# fit: exact recovery of a known per-bucket correction
+# ---------------------------------------------------------------------------
+
+def test_fit_recovers_known_bucket_scales():
+    # two shapes per (bucket, dataflow) so every bucket clears
+    # MIN_BUCKET_SAMPLES; truth differs by bucket AND dataflow
+    small = [(16, 16, 16), (32, 16, 16)]     # bucket 6
+    large = [(256, 256, 256), (512, 256, 256)]
+    truth = {(shape_bucket(*small[0]), "IS"): 3.0,
+             (shape_bucket(*small[0]), "OS"): 1.5,
+             (shape_bucket(*large[0]), "IS"): 0.25,
+             (shape_bucket(*large[0]), "OS"): 8.0}
+    entries = []
+    for shapes in (small, large):
+        for (M, K, N) in shapes:
+            for d in ("IS", "OS"):
+                entries.append(_gemm_entry(
+                    M, K, N, d, truth[(shape_bucket(M, K, N), d)]))
+    model = fit_cost_correction(_cache(entries), FPGA_VU9P)
+    for (b, d), s in truth.items():
+        assert model.bucket_scales[(b, d)] == pytest.approx(s, rel=1e-12)
+        assert model.bucket_samples[(b, d)] == 2
+    # scale() routes through the bucket, not the flat fallback
+    assert model.scale(16, 16, 16, "IS") == pytest.approx(3.0)
+    assert model.scale(256, 256, 256, "IS") == pytest.approx(0.25)
+    assert model.n_ratios == 8
+
+
+def test_fit_geomean_averages_noisy_ratios():
+    # same bucket, ratios 2 and 8 -> geomean 4 (not arithmetic mean 5)
+    entries = [_gemm_entry(16, 16, 16, "WS", 2.0),
+               _gemm_entry(32, 16, 16, "WS", 8.0)]
+    model = fit_cost_correction(_cache(entries), FPGA_VU9P)
+    b = shape_bucket(16, 16, 16)
+    assert model.bucket_scales[(b, "WS")] == pytest.approx(4.0, rel=1e-12)
+    assert model.dataflow_scales["WS"] == pytest.approx(4.0, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# fallback chain on sparse buckets
+# ---------------------------------------------------------------------------
+
+def test_sparse_bucket_falls_back_to_dataflow_geomean():
+    # bucket A: 2 samples (trusted); bucket B: 1 sample (sparse)
+    entries = [_gemm_entry(16, 16, 16, "IS", 2.0),
+               _gemm_entry(32, 16, 16, "IS", 2.0),
+               _gemm_entry(512, 512, 512, "IS", 32.0)]
+    model = fit_cost_correction(_cache(entries), FPGA_VU9P)
+    b_dense = shape_bucket(16, 16, 16)
+    b_sparse = shape_bucket(512, 512, 512)
+    assert (b_dense, "IS") in model.bucket_scales
+    assert (b_sparse, "IS") not in model.bucket_scales      # below min_samples
+    assert model.bucket_samples[(b_sparse, "IS")] == 1      # but counted
+    # sparse bucket's scale() = the per-dataflow geomean over ALL ratios
+    geo = math.exp((math.log(2.0) + math.log(2.0) + math.log(32.0)) / 3)
+    assert model.scale(512, 512, 512, "IS") == pytest.approx(geo, rel=1e-12)
+    # unmeasured dataflow -> identity
+    assert model.scale(512, 512, 512, "OS") == 1.0
+
+
+def test_unmeasured_model_is_identity():
+    model = fit_cost_correction(_cache([]), FPGA_VU9P)
+    assert model.scale(64, 64, 64, "IS") == 1.0
+    assert model.n_ratios == 0
+    assert model.bucket_scales == {}
+
+
+def test_min_samples_threshold_is_tunable():
+    entries = [_gemm_entry(512, 512, 512, "IS", 32.0)]
+    trusting = fit_cost_correction(_cache(entries), FPGA_VU9P, min_samples=1)
+    b = shape_bucket(512, 512, 512)
+    assert trusting.bucket_scales[(b, "IS")] == pytest.approx(32.0)
+    assert trusting.min_samples == 1
+    assert MIN_BUCKET_SAMPLES == 2  # the documented default stays strict
+
+
+# ---------------------------------------------------------------------------
+# fit filters: device, interpret, shape set, operating point
+# ---------------------------------------------------------------------------
+
+def test_fit_filters_device_interpret_and_shapes():
+    keep = _gemm_entry(16, 16, 16, "IS", 2.0)
+    wrong_dev = _gemm_entry(32, 16, 16, "IS", 100.0, device_kind="tpu")
+    wrong_interp = _gemm_entry(16, 32, 16, "IS", 100.0, interpret=False)
+    entries = [keep, wrong_dev, wrong_interp]
+    model = fit_cost_correction(_cache(entries), FPGA_VU9P,
+                                device_kind="cpu", interpret=True)
+    assert model.n_ratios == 1
+    assert model.dataflow_scales["IS"] == pytest.approx(2.0)
+    # shape pinning: an extra measured shape outside the set is invisible
+    extra = _gemm_entry(64, 64, 64, "IS", 100.0)
+    pinned = fit_cost_correction(_cache([keep, extra]), FPGA_VU9P,
+                                 shapes=[(16, 16, 16)])
+    assert pinned.n_ratios == 1
+    assert pinned.dataflow_scales["IS"] == pytest.approx(2.0)
+
+
+def test_fit_reads_only_the_heuristic_blocks_variant():
+    """Sweep-only variants (e.g. from a measured-tilings compile) must
+    not perturb the fit — warm-cache re-emission stays bit-identical."""
+    clean = _gemm_entry(16, 16, 16, "IS", 2.0)
+    sweep_only = _gemm_entry(32, 16, 16, "IS", 100.0, at_heuristic=False)
+    model = fit_cost_correction(_cache([clean, sweep_only]), FPGA_VU9P)
+    assert model.n_ratios == 1
+    assert model.dataflow_scales["IS"] == pytest.approx(2.0)
+
+
+def test_describe_is_json_friendly_summary():
+    entries = [_gemm_entry(16, 16, 16, "IS", 2.0),
+               _gemm_entry(32, 16, 16, "IS", 2.0)]
+    model = fit_cost_correction(_cache(entries), FPGA_VU9P,
+                                device_kind="cpu", interpret=True)
+    d = model.describe()
+    assert d["model"] == "shape-bucket-geomean"
+    assert d["bucket_log2_width"] == SHAPE_BUCKET_LOG2_WIDTH
+    assert d["n_ratios"] == 2
+    assert d["device_kind"] == "cpu"
+    b = shape_bucket(16, 16, 16)
+    assert d["bucket_scales"][f"b{b}:IS"] == pytest.approx(2.0)
+    import json
+    json.dumps(d)  # must serialize as-is into the DSE report
+
+
+# ---------------------------------------------------------------------------
+# apply_calibration dispatch for the model object
+# ---------------------------------------------------------------------------
+
+def _layer_paths():
+    return [
+        find_topk_paths(tt_linear_network(64, (2, 8), (8, 2), (4, 4, 4)), k=3),
+        find_topk_paths(tt_linear_network(4, (4, 4), (4, 4), (4, 4, 4)), k=2),
+    ]
+
+
+def test_apply_calibration_with_model_scales_by_dominant_gemm():
+    layer_paths = _layer_paths()
+    table = build_cost_table_vectorized(layer_paths, FPGA_VU9P,
+                                        ALL_PARTITIONINGS)
+    model = CostCorrection(bucket_scales={}, dataflow_scales={"IS": 2.0},
+                           bucket_samples={})
+    scaled = apply_calibration(table, model, layer_paths=layer_paths)
+    for (l, p, c, d), v in table.items():
+        factor = 2.0 if getattr(d, "value", d) == "IS" else 1.0
+        assert scaled[(l, p, c, d)] == pytest.approx(factor * v)
+
+
+def test_apply_calibration_model_uses_shape_buckets():
+    layer_paths = _layer_paths()
+    table = build_cost_table_vectorized(layer_paths, FPGA_VU9P,
+                                        ALL_PARTITIONINGS)
+    # put every dominant GEMM's bucket in the model with a known scale
+    buckets = {}
+    for l, paths in enumerate(layer_paths):
+        for p, path in enumerate(paths):
+            M, K, N = dominant_gemm(path)
+            for d in ALL_DATAFLOWS:
+                buckets[(shape_bucket(M, K, N), d.value)] = 5.0
+    model = CostCorrection(bucket_scales=buckets,
+                           dataflow_scales={}, bucket_samples={})
+    scaled = apply_calibration(table, model, layer_paths=layer_paths)
+    for k, v in table.items():
+        assert scaled[k] == pytest.approx(5.0 * v)
+
+
+def test_apply_calibration_model_requires_layer_paths():
+    layer_paths = _layer_paths()
+    table = build_cost_table_vectorized(layer_paths, FPGA_VU9P,
+                                        ALL_PARTITIONINGS)
+    model = CostCorrection(bucket_scales={}, dataflow_scales={},
+                           bucket_samples={})
+    with pytest.raises(ValueError, match="layer_paths"):
+        apply_calibration(table, model)
+
+
+def test_apply_calibration_model_rejects_nonpositive_scale():
+    layer_paths = _layer_paths()
+    table = build_cost_table_vectorized(layer_paths, FPGA_VU9P,
+                                        ALL_PARTITIONINGS)
+    model = CostCorrection(bucket_scales={}, dataflow_scales={"IS": -1.0},
+                           bucket_samples={})
+    with pytest.raises(ValueError, match="positive"):
+        apply_calibration(table, model, layer_paths=layer_paths)

@@ -1,0 +1,308 @@
+"""Differential-oracle contract for the guided joint search.
+
+The exhaustive ``global_search`` (Algorithm 1 + hw co-search outer
+loop) is the permanent test oracle; ``repro.search.guided_search`` must
+satisfy three properties against it:
+
+1. **Oracle parity** — with a generous budget (enough to refine every
+   candidate), guided returns the *exact* exhaustive optimum on
+   hypothesis-randomized small joint spaces: same cost, same chosen
+   architecture (by identity), same strategy and per-layer choices,
+   tie-breaks included.
+2. **Determinism** — the same seed yields an identical ``DSEResult``
+   (dataclass equality, so every field including provenance matches).
+3. **Budget-monotonicity** — a larger budget never returns a worse
+   optimum (the evaluation stream is budget-independent; budget is a
+   prefix cutoff).
+
+Plus the ROADMAP gap (c) regression: ``calibration`` now composes with
+``hw_space`` — the combo runs and a skewed calibration can genuinely
+flip the co-search argmin.
+"""
+
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    find_topk_paths,
+    global_search,
+    memoised_layer_backwards,
+    tt_linear_network,
+)
+from repro.core.simulator import ALL_DATAFLOWS
+from repro.hw import ArchSpace, FPGA_VU9P
+from repro.search import (
+    BudgetExhausted,
+    Genome,
+    JointSpace,
+    guided_search,
+)
+
+# ---------------------------------------------------------------------------
+# fixtures: a handful of tiny layer stacks + arch-candidate pool
+# ---------------------------------------------------------------------------
+
+_NETS = {
+    "a": lambda: [
+        find_topk_paths(tt_linear_network(64, (2, 8), (8, 2), (4, 4, 4)), k=3),
+        find_topk_paths(tt_linear_network(4, (4, 4), (4, 4), (4, 4, 4)), k=2),
+    ],
+    "b": lambda: [
+        find_topk_paths(tt_linear_network(16, (4, 4), (4, 4), (6, 6, 6)), k=2),
+    ],
+    "c": lambda: [
+        find_topk_paths(tt_linear_network(32, (8, 4), (4, 8), (4, 4, 4)), k=2),
+        find_topk_paths(tt_linear_network(8, (2, 4), (4, 2), (2, 2, 2)), k=3),
+        find_topk_paths(tt_linear_network(64, (4, 8), (8, 4), (4, 4, 4)), k=2),
+    ],
+}
+_LAYERS = {name: f() for name, f in _NETS.items()}
+_CANDS = ArchSpace(base=FPGA_VU9P).candidates()
+
+
+def _space(start: int, n: int):
+    """``n`` candidates from the VU9P arch space, base always included
+    (guided refines index 0 first; keep that the semantic base)."""
+    picked = [_CANDS[0]]
+    step = max(1, (len(_CANDS) - 1) // max(1, n))
+    i = 1 + (start % step)
+    while len(picked) < n and i < len(_CANDS):
+        picked.append(_CANDS[i])
+        i += step
+    return tuple(picked)
+
+
+def _assert_same_result(g, e):
+    assert g.total_latency_s == e.total_latency_s
+    assert g.hw is e.hw
+    assert g.strategy == e.strategy
+    assert g.choices == e.choices
+    assert g.objective == e.objective
+
+
+# ---------------------------------------------------------------------------
+# 1. oracle parity on randomized small joint spaces
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    net=st.sampled_from(sorted(_LAYERS)),
+    start=st.integers(min_value=0, max_value=40),
+    n_arch=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_guided_generous_budget_matches_exhaustive(net, start, n_arch, seed):
+    layer_paths = _LAYERS[net]
+    space = _space(start, n_arch)
+    exhaustive = global_search(layer_paths, space[0], hw_space=space)
+    guided = guided_search(layer_paths, space[0], hw_space=space,
+                           budget=exhaustive.evals, seed=seed)
+    _assert_same_result(guided, exhaustive)
+    assert guided.search == "guided"
+    assert exhaustive.search == "exhaustive"
+    # generous budget visits everything: guided charges each cell at
+    # most once, so it costs exactly the exhaustive count
+    assert guided.evals == exhaustive.evals
+    assert len(guided.hw_candidates) == len(space)
+    assert guided.found_at_eval <= guided.evals
+
+
+def test_guided_fixed_target_is_algorithm_one():
+    layer_paths = _LAYERS["a"]
+    exhaustive = global_search(layer_paths, FPGA_VU9P)
+    guided = guided_search(layer_paths, FPGA_VU9P)
+    _assert_same_result(guided, exhaustive)
+    assert guided.hw_candidates == ()
+    assert guided.evals == exhaustive.evals == len(exhaustive.cost_table)
+
+
+def test_guided_train_latency_parity():
+    layer_paths = _LAYERS["a"]
+    nets = [tt_linear_network(64, (2, 8), (8, 2), (4, 4, 4)),
+            tt_linear_network(4, (4, 4), (4, 4), (4, 4, 4))]
+    backwards = memoised_layer_backwards(nets, k=3)
+    space = _space(3, 6)
+    exhaustive = global_search(layer_paths, space[0], hw_space=space,
+                               objective="train-latency",
+                               layer_backwards=backwards)
+    guided = guided_search(layer_paths, space[0], hw_space=space,
+                           objective="train-latency",
+                           layer_backwards=backwards,
+                           budget=exhaustive.evals, seed=7)
+    _assert_same_result(guided, exhaustive)
+
+
+# ---------------------------------------------------------------------------
+# 2. fixed-seed determinism
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_arch=st.integers(min_value=2, max_value=12))
+def test_guided_same_seed_bit_identical(seed, n_arch):
+    layer_paths = _LAYERS["b"]
+    space = _space(seed, n_arch)
+    runs = [guided_search(layer_paths, space[0], hw_space=space, seed=seed)
+            for _ in range(2)]
+    # DSEResult is a dataclass: equality covers cost, choices, table,
+    # hw_candidates, and the search/evals/found_at_eval provenance
+    assert runs[0] == runs[1]
+
+
+def test_guided_different_seeds_still_reach_oracle_with_full_budget():
+    layer_paths = _LAYERS["b"]
+    space = _space(0, 8)
+    exhaustive = global_search(layer_paths, space[0], hw_space=space)
+    for seed in range(5):
+        guided = guided_search(layer_paths, space[0], hw_space=space,
+                               budget=exhaustive.evals, seed=seed)
+        _assert_same_result(guided, exhaustive)
+
+
+# ---------------------------------------------------------------------------
+# 3. budget-monotonicity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1_000))
+def test_guided_budget_monotone(seed):
+    layer_paths = _LAYERS["b"]
+    space = _space(2, 10)
+    from repro.core.cost_table import table_cells
+
+    n_cells = table_cells(layer_paths)
+    costs = []
+    for mult in (1, 2, 3, 5, 10):
+        res = guided_search(layer_paths, space[0], hw_space=space,
+                            budget=mult * n_cells, seed=seed)
+        assert res.evals <= mult * n_cells
+        costs.append(res.total_latency_s)
+    assert costs == sorted(costs, reverse=True)  # never worse as budget grows
+
+
+def test_guided_budget_below_one_table_rejected():
+    layer_paths = _LAYERS["b"]
+    from repro.core.cost_table import table_cells
+
+    with pytest.raises(ValueError, match="cannot refine even one"):
+        guided_search(layer_paths, FPGA_VU9P,
+                      budget=table_cells(layer_paths) - 1)
+
+
+def test_guided_minimal_budget_equals_fixed_target():
+    """One table of budget => exactly the base architecture's optimum."""
+    layer_paths = _LAYERS["a"]
+    space = _space(1, 8)
+    from repro.core.cost_table import table_cells
+
+    fixed = global_search(layer_paths, space[0])
+    res = guided_search(layer_paths, space[0], hw_space=space,
+                        budget=table_cells(layer_paths), seed=0)
+    assert res.total_latency_s == fixed.total_latency_s
+    assert res.hw is space[0]
+
+
+# ---------------------------------------------------------------------------
+# guided-search input validation
+# ---------------------------------------------------------------------------
+
+def test_guided_rejects_unsupported_objectives():
+    layer_paths = _LAYERS["b"]
+    with pytest.raises(ValueError, match="exhaustive path"):
+        guided_search(layer_paths, FPGA_VU9P, objective="edp")
+    with pytest.raises(ValueError, match="layer_backwards"):
+        guided_search(layer_paths, FPGA_VU9P, objective="train-latency")
+
+
+# ---------------------------------------------------------------------------
+# ROADMAP gap (c): calibration x hw-search composes
+# ---------------------------------------------------------------------------
+
+def test_calibration_with_hw_space_runs_and_rescales():
+    layer_paths = _LAYERS["a"]
+    space = _space(0, 6)
+    plain = global_search(layer_paths, space[0], hw_space=space)
+    scale = {d: 2.0 for d in ALL_DATAFLOWS}
+    scaled = global_search(layer_paths, space[0], hw_space=space,
+                           calibration=scale)
+    # uniform rescale: same winner, exactly doubled cost
+    assert scaled.hw is plain.hw
+    assert scaled.total_latency_s == pytest.approx(2.0 * plain.total_latency_s)
+    for c_plain, c_scaled in zip(plain.hw_candidates, scaled.hw_candidates):
+        assert c_scaled.total_latency_s == pytest.approx(
+            2.0 * c_plain.total_latency_s)
+
+
+def test_calibration_can_flip_hw_cosearch_argmin():
+    """A skewed per-dataflow calibration must be able to change which
+    architecture wins the co-search (the regression: this combination
+    used to be rejected outright)."""
+    layer_paths = _LAYERS["a"]
+    space = _space(0, 10)
+    plain = global_search(layer_paths, space[0], hw_space=space)
+    flipped = None
+    for skew in (10.0, 100.0, 1e4, 1e6):
+        for d in ALL_DATAFLOWS:
+            cal = {x: (skew if x == d else 1.0) for x in ALL_DATAFLOWS}
+            res = global_search(layer_paths, space[0], hw_space=space,
+                                calibration=cal)
+            if res.hw is not plain.hw or res.choices != plain.choices:
+                flipped = (d, skew, res)
+                break
+        if flipped:
+            break
+    assert flipped is not None, (
+        "no per-dataflow skew changed the co-search outcome — the "
+        "calibration is not reaching the per-candidate tables")
+
+
+def test_guided_calibration_parity_with_exhaustive():
+    layer_paths = _LAYERS["a"]
+    space = _space(0, 6)
+    cal = {"IS": 3.0, "OS": 0.5, "WS": 1.5}
+    exhaustive = global_search(layer_paths, space[0], hw_space=space,
+                               calibration=cal)
+    guided = guided_search(layer_paths, space[0], hw_space=space,
+                           calibration=cal, budget=exhaustive.evals, seed=1)
+    _assert_same_result(guided, exhaustive)
+
+
+# ---------------------------------------------------------------------------
+# encoding invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_genome_operators_always_produce_valid_table_coords(seed):
+    layer_paths = _LAYERS["c"]
+    space_hw = _space(seed, 9)
+    js = JointSpace(layer_paths, space_hw)
+    rng = random.Random(seed)
+    table_keys = None
+    genomes = [js.random_genome(rng) for _ in range(6)]
+    for _ in range(10):
+        a, b = rng.sample(genomes, 2)
+        genomes.append(js.mutate(js.crossover(a, b, rng), rng))
+    for g in genomes:
+        assert 0 <= g.arch < len(space_hw)
+        assert g.strategy in js.strategy_space
+        c_h = js.strategy_space[g.strategy]
+        for (l, p, c, d) in g.keys():
+            assert 0 <= p < len(layer_paths[l])
+            assert c in c_h          # repair keeps partitioning feasible
+            assert d in js.dataflows
+
+
+def test_budget_exhausted_is_internal_control_flow():
+    """BudgetExhausted never escapes guided_search; it is exported only
+    so extensions (and this test) can name it."""
+    assert issubclass(BudgetExhausted, Exception)
+    layer_paths = _LAYERS["b"]
+    from repro.core.cost_table import table_cells
+
+    res = guided_search(layer_paths, _CANDS[0], hw_space=_space(0, 12),
+                        budget=table_cells(layer_paths), seed=0)
+    assert res.search == "guided"  # returned normally at minimal budget

@@ -28,11 +28,13 @@ from repro.core.dse import apply_calibration
 from repro.nn import LinearSpec, TTConfig
 from repro.plan import ExecutionPlan, compile_plan
 from repro.tune import (
+    KERNEL_MODULES,
     Autotuner,
     TuningCache,
     gemm_variants,
     gemm_work_items,
     heuristic_blocks,
+    kernel_fingerprint,
     measured_calibration,
     streaming_variants,
     variant_key,
@@ -111,6 +113,53 @@ def test_cache_is_device_keyed():
     keys = set(cache.entries)
     assert any(":cpu:" in k for k in keys)
     assert any(":TPU_v5e:" in k for k in keys)
+
+
+def test_kernel_fingerprint_tracks_kernel_sources(tmp_path):
+    """The fingerprint hashes the Pallas kernel sources: stable across
+    calls, sensitive to any byte of any kernel file."""
+    assert kernel_fingerprint() == kernel_fingerprint()
+    assert len(kernel_fingerprint()) == 12
+    assert len(KERNEL_MODULES) == 3
+
+    a = tmp_path / "a.py"
+    b = tmp_path / "b.py"
+    a.write_text("def kernel(): return 1\n")
+    b.write_text("def other(): return 2\n")
+    fp = kernel_fingerprint([str(a), str(b)])
+    assert kernel_fingerprint([str(a), str(b)]) == fp
+    # path order must not matter (sorted before hashing)
+    assert kernel_fingerprint([str(b), str(a)]) == fp
+    # a one-byte kernel edit yields a different fingerprint
+    a.write_text("def kernel(): return 9\n")
+    assert kernel_fingerprint([str(a), str(b)]) != fp
+
+
+def test_cache_is_kernel_fingerprint_keyed():
+    """ROADMAP gap (d): mutating a kernel invalidates cached timings —
+    entries keyed under the old fingerprint simply stop matching, so the
+    tuner re-measures instead of replaying stale numbers."""
+    cache = TuningCache()
+    v1 = _stub_tuner(cache, kernel_fp="aaaa00000000")
+    best = v1.tune_gemm(64, 64, 64, "OS")
+    assert v1.n_measured > 0
+
+    # same kernels -> warm replay, zero measurements (even with a
+    # measurement fn that would fail the test if called)
+    warm = Autotuner(cache, "cache", device_kind="cpu", interpret=True,
+                     measure_gemm_fn=_fail_gemm,
+                     measure_streaming_fn=_fail_streaming,
+                     kernel_fp="aaaa00000000")
+    assert warm.tune_gemm(64, 64, 64, "OS") == best
+    assert warm.n_measured == 0 and warm.n_cache_hits > 0
+
+    # mutated kernels -> every lookup misses, fresh measurements
+    v2 = _stub_tuner(cache, kernel_fp="bbbb11111111")
+    assert v2.tune_gemm(64, 64, 64, "OS") == best  # same fake model
+    assert v2.n_cache_hits == 0 and v2.n_measured > 0
+    keys = set(cache.entries)
+    assert any(":kaaaa00000000" in k for k in keys)
+    assert any(":kbbbb11111111" in k for k in keys)
 
 
 def test_cache_rejects_foreign_json():
@@ -196,6 +245,14 @@ def test_measured_plan_validates_and_replays_from_cache(tmp_path):
     assert replay.n_measured == 0 and replay.n_cache_hits > 0
     assert plan2.dumps() == text
 
+    # a kernel-source mutation (different fingerprint) makes the same
+    # cache stale: nothing replays, everything re-measures (gap (d))
+    stale = _stub_tuner(cache, kernel_fp="deadbeef0000")
+    plan3 = compile_plan([("demo", tn)], res, FPGA_VU9P, arch="unit",
+                         tokens=32, tilings="measured", tuner=stale)
+    assert stale.n_cache_hits == 0 and stale.n_measured > 0
+    assert plan3.dumps() == text  # same fake measurements -> same plan
+
 
 def test_measured_tilings_differ_from_heuristic_on_large_shapes():
     # tokens 512 > the heuristic's 256 block_tokens cap; the fake
@@ -269,9 +326,14 @@ def test_apply_calibration_validation():
     with pytest.raises(ValueError):
         apply_calibration(table, {"XX": 1.0})
     _, _, paths, _ = _unit_problem()
-    with pytest.raises(ValueError, match="fixed-target"):
-        global_search([paths], FPGA_VU9P, calibration={"OS": 2.0},
-                      hw_space=(FPGA_VU9P,))
+    # calibration composes with the architecture co-search (ROADMAP gap
+    # (c), closed): uniform scale -> same winner, scaled cost — the
+    # argmin-flipping case lives in tests/test_search_oracle.py
+    plain = global_search([paths], FPGA_VU9P, hw_space=(FPGA_VU9P,))
+    res_hw = global_search([paths], FPGA_VU9P, calibration={d.value: 2.0
+                                                            for d in Dataflow},
+                           hw_space=(FPGA_VU9P,))
+    assert res_hw.total_latency_s == pytest.approx(2 * plain.total_latency_s)
     from repro.core import memoised_layer_backwards
     _, tn, _, _ = _unit_problem()
     with pytest.raises(ValueError, match="train"):
@@ -331,8 +393,22 @@ def test_run_dse_tune_rejects_unsupported_combos(tmp_path):
         run_dse("tt-lm-100m", smoke=True, mode="train", tune="cache")
     with pytest.raises(ValueError, match="analytic-only"):
         run_dse("tt-lm-100m", smoke=True, objective="edp", tune="cache")
-    with pytest.raises(ValueError, match="fixed-target"):
-        run_dse("tt-lm-100m", smoke=True, hw_search="budget", tune="cache")
+
+
+def test_run_dse_tune_composes_with_hw_search(tmp_path, monkeypatch):
+    """ROADMAP gap (c) closed: --tune now composes with --hw-search —
+    the calibrated tables rescale every candidate before its argmin."""
+    import repro.tune.measure as tmeasure
+    from repro.dse_cli import run_dse
+
+    monkeypatch.setattr(tmeasure, "measure_gemm", _fake_gemm)
+    monkeypatch.setattr(tmeasure, "measure_streaming", _fake_streaming)
+    cache = str(tmp_path / "cache.json")
+    report = run_dse("tt-lm-100m", smoke=True, top_k=2, tokens=32,
+                     hw_search="budget", tune="cache", tune_cache=cache)
+    assert report["hw_search"]["n_candidates"] >= 64
+    assert set(report["tune"]["calibration"]) == {"IS", "OS", "WS"}
+    assert report["tune"]["correction"]["model"] == "shape-bucket-geomean"
 
 
 def test_run_tune_cli_pipeline_with_stub_tuner(tmp_path):
