@@ -28,6 +28,7 @@ from . import (
     table4_efficiency,
     table5_training_latency,
     table6_hw_cosearch,
+    table_rank_frontier,
 )
 
 SUITES = {
@@ -37,6 +38,7 @@ SUITES = {
     "table4": table4_efficiency.run,
     "table5": table5_training_latency.run,
     "table6": table6_hw_cosearch.run,
+    "table_rank": table_rank_frontier.run,
     "fig3": fig3_paths.run,
     "fig5": fig5_dataflow.run,
     "dse_overhead": bench_dse_overhead.run,

@@ -1,0 +1,71 @@
+"""BENCH_rank — the decomposition axis: frozen baseline vs searched frontier.
+
+Writes ``results/benchmarks/BENCH_rank.json``: per arch, every rank
+candidate's (latency, compression, accuracy-proxy) triple, the
+latency/accuracy Pareto frontier, and the chosen candidate — the
+fastest one no less accurate than the frozen decomposition.  The
+headline column is ``dominates_frozen``: whether the search found a
+decomposition that is simultaneously faster and more accurate than the
+model's frozen TTConfig point (on tt-lm-100m the degenerate d=1
+low-rank candidate does).
+
+  PYTHONPATH=src python -m benchmarks.run --only table_rank
+"""
+
+from __future__ import annotations
+
+from repro.hw import get_target
+from repro.rank import rank_search
+
+from .common import emit, timed
+
+ARCHS = ["tt-lm-100m", "vit_ti4/cifar10"]
+TOP_K = 4
+HW = "fpga_vu9p"
+
+
+def run() -> list[dict]:
+    rows = []
+    hw_cfg = get_target(HW)
+    for arch in ARCHS:
+        res, wall_s = timed(rank_search, arch, hw_cfg, top_k=TOP_K,
+                            repeat=1)
+        frozen = res.frozen_eval
+        chosen = res.chosen_eval
+        cand_rows = [{
+            "name": e.candidate.name,
+            "d": e.candidate.d,
+            "rank": e.candidate.rank,
+            "latency_s": e.total_latency_s,
+            "compression": e.candidate.compression,
+            "accuracy_proxy": e.accuracy_proxy,
+            "tt_params": e.candidate.n_params,
+            "on_frontier": i in res.frontier,
+            "eval_s": e.eval_seconds,
+        } for i, e in enumerate(res.evals)]
+        rows.append({
+            "arch": arch,
+            "hw": HW,
+            "tokens": res.tokens,
+            "n_candidates": len(res.evals),
+            "frontier": [res.evals[i].candidate.name for i in res.frontier],
+            "frozen_latency_s": frozen.total_latency_s,
+            "frozen_proxy": frozen.accuracy_proxy,
+            "chosen": chosen.candidate.name,
+            "chosen_latency_s": chosen.total_latency_s,
+            "chosen_proxy": chosen.accuracy_proxy,
+            "chosen_compression": chosen.candidate.compression,
+            "dominates_frozen": res.dominates_frozen,
+            "improvement_pct": res.improvement_pct,
+            "wall_s": wall_s,
+            "candidates": cand_rows,
+        })
+    emit("BENCH_rank", rows,
+         keys=["arch", "n_candidates", "chosen", "chosen_latency_s",
+               "frozen_latency_s", "improvement_pct", "chosen_proxy",
+               "frozen_proxy", "dominates_frozen", "wall_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

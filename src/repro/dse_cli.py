@@ -44,6 +44,7 @@ from repro.hw import ArchSpace, get_target, list_targets
 from repro.hw import HW_TARGETS  # noqa: F401  (re-export; registry is repro.hw)
 from repro.models.config import ModelConfig
 from repro.nn.linear import LinearSpec
+from repro.rank import RANK_SEARCH_MODES
 
 OBJECTIVES = ("latency", "edp", "throughput")
 MODES = ("infer", "train", "both")
@@ -126,16 +127,23 @@ def _block_specs(cfg: ModelConfig) -> list[tuple[LinearSpec, int, float]]:
 
 
 def model_dse_layers(
-    cfg: ModelConfig, tokens: int
+    cfg: ModelConfig, tokens: int,
+    factorizations: Optional[dict] = None,
 ) -> list[tuple[str, TensorNetwork]]:
     """Tensorized projections of ``cfg`` as named contraction problems.
 
     One entry per projection *instance* (repeated transformer layers
     appear L times — the batched cost-table engine dedups them), with the
     streamed token count as the batch edge.
+
+    ``factorizations`` maps family names to explicit ``(out_modes,
+    in_modes, ranks)`` overrides (the rank search's candidate handle);
+    families not named keep their TTConfig-derived decomposition.
     """
     layers: list[tuple[str, TensorNetwork]] = []
     for spec, count, scale in _block_specs(cfg):
+        if factorizations is not None and spec.name in factorizations:
+            spec = spec.with_factorization(*factorizations[spec.name])
         if not spec.tensorized:
             continue  # dense projections have no path/dataflow freedom here
         t = max(1, math.ceil(tokens * scale))
@@ -218,6 +226,8 @@ def run_dse(
     search: str = "exhaustive",
     search_budget: Optional[int] = None,
     search_seed: int = 0,
+    rank_search: str = "off",
+    accuracy_budget: Optional[float] = None,
 ) -> dict:
     """Run Algorithm 1 end-to-end; returns the JSON-serializable report.
 
@@ -248,10 +258,18 @@ def run_dse(
     evaluations, ``search_seed`` for the proposal stream); the report's
     ``search`` section records the provenance (evals, found-at-eval,
     the exhaustive count it avoided).
+
+    ``rank_search="budget"`` adds the decomposition itself as a fourth
+    searched axis (``repro.rank``): every TT factorization candidate is
+    evaluated end-to-end and the report gains a ``rank_search`` section
+    with the (latency, accuracy-proxy) frontier; ``accuracy_budget``
+    caps the chosen candidate's reconstruction-error proxy (default:
+    no worse than the frozen decomposition).
     """
     if mode == "both":
         _check_train_compatible(objective, engine)  # fail before any search
         _check_tune_compatible(tune, "both", objective, hw_search)
+        _check_rank_compatible(rank_search, "both", objective, engine, tune)
         infer, _, _, _, _, _ = _run_dse(
             arch, hw, top_k, objective, tokens, smoke, engine, "infer",
             hw_search, hw_budget, search=search, search_budget=search_budget,
@@ -264,7 +282,7 @@ def run_dse(
     report, _, _, _, tuner, _ = _run_dse(
         arch, hw, top_k, objective, tokens, smoke, engine, mode, hw_search,
         hw_budget, tune, tune_cache, serve_gen, serve_slots, decode_tokens,
-        search, search_budget, search_seed)
+        search, search_budget, search_seed, rank_search, accuracy_budget)
     _save_tuner(tuner)
     return report
 
@@ -333,6 +351,8 @@ def run_dse_plan(
     search: str = "exhaustive",
     search_budget: Optional[int] = None,
     search_seed: int = 0,
+    rank_search: str = "off",
+    accuracy_budget: Optional[float] = None,
 ):
     """Run the DSE and compile its result into an ExecutionPlan.
 
@@ -353,7 +373,11 @@ def run_dse_plan(
     ``tune`` the search is measured-calibrated and the plan's tilings
     are the autotuner's measured argmins (``tilings: "measured"``) —
     served from the persistent cache, so a warm cache re-emits the
-    identical plan without measuring.
+    identical plan without measuring.  Under ``rank_search`` the plan
+    embeds the chosen candidate's factorizations (schema v4) so the
+    executor contracts the *searched* decomposition — vision archs
+    excepted (their conv decompositions are structural, not
+    plan-installable).
     """
     from repro.plan import BACKENDS, compile_plan
 
@@ -367,6 +391,7 @@ def run_dse_plan(
     if mode == "both":
         _check_train_compatible(objective, engine)  # fail before any search
         _check_tune_compatible(tune, "both", objective, hw_search)
+        _check_rank_compatible(rank_search, "both", objective, engine, tune)
         infer_report, _, _, _, _, _ = _run_dse(
             arch, hw, top_k, objective, tokens, smoke, engine, "infer",
             hw_search, hw_budget, search=search, search_budget=search_budget,
@@ -376,7 +401,20 @@ def run_dse_plan(
         arch, hw, top_k, objective, tokens, smoke, engine, plan_mode,
         hw_search, hw_budget, tune, tune_cache,
         serve_gen, serve_slots, decode_tokens,
-        search, search_budget, search_seed)
+        search, search_budget, search_seed, rank_search, accuracy_budget)
+    factorizations = None
+    rank_report = report.get("rank_search")
+    if rank_report is not None and rank_report.get("plan_embeddable"):
+        from repro.plan import Factorization
+
+        factorizations = {
+            f["name"]: Factorization(
+                out_modes=tuple(f["out_modes"]),
+                in_modes=tuple(f["in_modes"]),
+                ranks=tuple(f["ranks"]),
+                accuracy_proxy=float(f["accuracy_proxy"]))
+            for f in rank_report["chosen"]["families"]
+        }
     plan = compile_plan(
         named, res, plan_hw,
         arch=arch,
@@ -387,31 +425,35 @@ def run_dse_plan(
         tilings="heuristic" if tuner is None else "measured",
         tuner=tuner,
         phase=phase,
+        factorizations=factorizations,
     )
     if tuner is not None:
-        # the argmin ran over the calibrated table, so each choice's
-        # latency landed in measured-rescaled units; divide the scale
-        # back out so the plan's per-layer provenance stays in the same
-        # analytic seconds as its total_latency_s (up to float rounding
-        # — (analytic * cal) / cal can differ from analytic by an ulp).
-        # The correction model scales per (shape bucket, dataflow), so
-        # each family's scale comes from its own choice's dominant GEMM.
-        from repro.plan.compiler import base_name
-        from repro.tune.variants import dominant_gemm
+        if calibration is not None:
+            # the argmin ran over the calibrated table, so each choice's
+            # latency landed in measured-rescaled units; divide the scale
+            # back out so the plan's per-layer provenance stays in the
+            # same analytic seconds as its total_latency_s (up to float
+            # rounding — (analytic * cal) / cal can differ from analytic
+            # by an ulp).  The correction model scales per (shape bucket,
+            # dataflow), so each family's scale comes from its own
+            # choice's dominant GEMM.  Train-mode searches run analytic
+            # (calibration is None) — their latencies need no unscaling.
+            from repro.plan.compiler import base_name
+            from repro.tune.variants import dominant_gemm
 
-        fam_choice = {}
-        for (inst_name, _), choice in zip(named, res.choices):
-            fam_choice.setdefault(base_name(inst_name), choice)
+            fam_choice = {}
+            for (inst_name, _), choice in zip(named, res.choices):
+                fam_choice.setdefault(base_name(inst_name), choice)
 
-        def _unscale(lp):
-            c = fam_choice[lp.name]
-            M, K, N = dominant_gemm(c.path)
-            return dataclasses.replace(
-                lp, latency_s=lp.latency_s / calibration.scale(
-                    M, K, N, lp.dataflow))
+            def _unscale(lp):
+                c = fam_choice[lp.name]
+                M, K, N = dominant_gemm(c.path)
+                return dataclasses.replace(
+                    lp, latency_s=lp.latency_s / calibration.scale(
+                        M, K, N, lp.dataflow))
 
-        plan = dataclasses.replace(
-            plan, layers=tuple(_unscale(lp) for lp in plan.layers))
+            plan = dataclasses.replace(
+                plan, layers=tuple(_unscale(lp) for lp in plan.layers))
         # compilation may have measured additional (per-family) sweeps;
         # refresh the report's counters and persist the cache
         report["tune"]["n_measured"] = tuner.n_measured
@@ -476,21 +518,56 @@ def _check_tune_compatible(tune: str, mode: str, objective: str,
     """Reject combinations the measured-latency loop cannot honour yet.
 
     The calibration rescales the inference latency table — per candidate
-    under an architecture co-search (ROADMAP gap c, closed); composing
-    it with the training decomposition or the EDP objective are still
-    open items (ROADMAP.md)."""
+    under an architecture co-search (ROADMAP gap c, closed).  Train mode
+    is allowed since the tiling lift (ROADMAP gap b): the train *search*
+    stays analytic, but train-mode plans serve measured forward tilings
+    and any backward-op tilings already in the cache.  Composing the
+    calibration with the fwd+bwd decomposition or the EDP objective are
+    still open items (ROADMAP.md)."""
     if tune == "off":
         return
     if tune not in TUNE_MODES:
         raise KeyError(f"unknown tune mode {tune!r}; have {TUNE_MODES}")
-    if mode != "infer":
+    if mode == "both":
         raise ValueError(
-            "--tune calibrates the inference search; --mode "
-            f"{mode} is analytic-only for now")
+            "--tune with --mode both is ambiguous (the infer leg searches "
+            "a calibrated table, the train leg an analytic one); run the "
+            "modes separately")
     if objective != "latency":
         raise ValueError(
             "--tune calibrates the latency objective; --objective "
             f"{objective} is analytic-only for now")
+
+
+def _check_rank_compatible(rank_search: str, mode: str, objective: str,
+                           engine: str, tune: str) -> None:
+    """Reject combinations the rank search cannot honour.
+
+    The decomposition axis re-derives every layer's tensor network per
+    candidate, so it composes with the path/partitioning/dataflow axes,
+    the architecture co-search, and the guided explorer — but not (yet)
+    with the train decomposition, non-latency objectives, the scalar
+    engine, or the measured calibration (whose cache keys would have to
+    span every candidate's GEMM shapes)."""
+    if rank_search == "off":
+        return
+    if rank_search not in RANK_SEARCH_MODES:
+        raise KeyError(
+            f"unknown rank_search {rank_search!r}; have {RANK_SEARCH_MODES}")
+    if mode != "infer":
+        raise ValueError(
+            "--rank-search explores the inference latency/accuracy "
+            f"frontier; --mode {mode} is frozen-decomposition only")
+    if objective != "latency":
+        raise ValueError(
+            "--rank-search trades latency against the accuracy proxy; "
+            f"--objective {objective} is frozen-decomposition only")
+    if engine == "scalar":
+        raise ValueError("--rank-search requires the vectorized engine")
+    if tune != "off":
+        raise ValueError(
+            "--rank-search is analytic: the measured calibration would "
+            "need per-candidate GEMM coverage (open item)")
 
 
 def _make_tuner(tune: str, tune_cache: Optional[str]):
@@ -525,6 +602,8 @@ def _run_dse(
     search: str = "exhaustive",
     search_budget: Optional[int] = None,
     search_seed: int = 0,
+    rank_search: str = "off",
+    accuracy_budget: Optional[float] = None,
 ):
     """Shared pipeline; returns (report, named_layers, DSEResult, hw_cfg,
     tuner, calibration).
@@ -594,6 +673,13 @@ def _run_dse(
     if search_budget is not None and search != "guided":
         raise ValueError("search_budget requires search='guided'")
     _check_tune_compatible(tune, mode, objective, hw_search)
+    if rank_search != "off":
+        _check_rank_compatible(rank_search, mode, objective, engine, tune)
+        return _run_rank_dse(
+            arch, hw, top_k, tokens, smoke, engine, hw_search, hw_budget,
+            search, search_budget, search_seed, accuracy_budget)
+    if accuracy_budget is not None:
+        raise ValueError("accuracy_budget requires rank_search='budget'")
 
     named, tokens = dse_problems(arch, tokens, smoke)
 
@@ -624,7 +710,28 @@ def _run_dse(
     tuner = None
     tune_report = None
     calibration = None
-    if tune != "off":
+    if tune != "off" and mode == "train":
+        # ROADMAP gap (b): train-mode plans may serve measured tilings —
+        # forward ops through the usual measured sweep, backward ops from
+        # whatever the cache already holds (analytic fallback on miss) —
+        # but the train *search* stays analytic: composing the measured
+        # calibration with the fwd+bwd+update decomposition is open.
+        tuner = _make_tuner(tune, tune_cache)
+        tune_report = {
+            "mode": tune,
+            "cache": tuner.cache_path,
+            "device_kind": tuner.device_kind,
+            "interpret": tuner.interpret,
+            "n_calibration_shapes": 0,
+            "calibration": None,
+            "correction": None,
+            "note": "train search is analytic; measured tilings only",
+            "n_measured": tuner.n_measured,
+            "n_cache_hits": tuner.n_cache_hits,
+            "n_cache_entries": len(tuner.cache),
+            "measure_s": 0.0,
+        }
+    elif tune != "off":
         from repro.tune import (
             fit_cost_correction,
             gemm_work_items,
@@ -875,6 +982,175 @@ def _run_dse(
             (res.hw if res.hw is not None else hw_cfg), tuner, calibration)
 
 
+def _run_rank_dse(
+    arch: str,
+    hw: str,
+    top_k: int,
+    tokens: Optional[int],
+    smoke: bool,
+    engine: str,
+    hw_search: str,
+    hw_budget: Optional[int],
+    search: str,
+    search_budget: Optional[int],
+    search_seed: int,
+    accuracy_budget: Optional[float],
+):
+    """The ``--rank-search budget`` pipeline (repro.rank).
+
+    Evaluates every decomposition candidate through the same cost-table
+    /argmin stack as :func:`_run_dse` and reports the chosen candidate's
+    per-layer choices plus a ``rank_search`` frontier section.  Same
+    return contract as ``_run_dse`` — ``run_dse_plan`` compiles the
+    chosen candidate's networks/choices into a (v4) plan.
+    """
+    from repro.rank import rank_search as _rank_search
+
+    hw_cfg = get_target(hw)
+    hw_space = None
+    space = None
+    n_space = 1
+    if hw_search == "budget":
+        space = ArchSpace(base=hw_cfg, mac_budget=hw_budget)
+        hw_space = space.candidates()
+        n_space = len(hw_space)
+
+    t0 = time.perf_counter()
+    rres = _rank_search(
+        arch, hw_cfg, top_k=top_k, tokens=tokens, smoke=smoke,
+        hw_space=hw_space, search=search, search_budget=search_budget,
+        search_seed=search_seed, accuracy_budget=accuracy_budget)
+    rank_search_s = time.perf_counter() - t0
+
+    ce = rres.chosen_eval
+    named, res = ce.named, ce.res
+    plan_hw = res.hw if res.hw is not None else hw_cfg
+
+    # rebuild the chosen candidate's analytic table for the per-layer
+    # report (under --hw-search: on its winning architecture)
+    t0 = time.perf_counter()
+    layer_paths = model_layer_paths(named, top_k)
+    path_search_s = time.perf_counter() - t0
+    if hw_search == "budget":
+        from repro.core import build_cost_tables_hw
+
+        tables = build_cost_tables_hw(layer_paths, (plan_hw,),
+                                      ALL_PARTITIONINGS)[0]
+    else:
+        tables = build_cost_tables(layer_paths, hw_cfg, ALL_PARTITIONINGS)
+    seconds_table = tables.seconds
+    hw_search_report = (_hw_search_report(space, res, hw_cfg, n_space)
+                        if hw_search == "budget" else None)
+
+    layers = []
+    total_latency = 0.0
+    for (name, _), choice in zip(named, res.choices):
+        key = (choice.layer, choice.path_index, choice.partitioning,
+               choice.dataflow)
+        latency_s = seconds_table[key]
+        total_latency += latency_s
+        layers.append({
+            "name": name,
+            "path_index": choice.path_index,
+            "mac_optimal_path": choice.path_index == 0,
+            "macs": choice.path.macs,
+            "partitioning": list(choice.partitioning),
+            "dataflow": choice.dataflow.value,
+            "latency_s": latency_s,
+            "objective": choice.latency_s,
+        })
+
+    def cand_row(i: int) -> dict:
+        e = rres.evals[i]
+        c = e.candidate
+        return {
+            "name": c.name,
+            "d": c.d,
+            "rank": c.rank,
+            "n_params": c.n_params,
+            "compression": c.compression,
+            "accuracy_proxy": e.accuracy_proxy,
+            "total_latency_s": e.total_latency_s,
+            "strategy": e.res.strategy,
+            "on_frontier": i in rres.frontier,
+            "eval_seconds": e.eval_seconds,
+        }
+
+    rows = [cand_row(i) for i in range(len(rres.evals))]
+    chosen_row = dict(rows[rres.chosen])
+    chosen_row["families"] = [
+        {
+            "name": f.name,
+            "out_modes": list(f.out_modes),
+            "in_modes": list(f.in_modes),
+            "ranks": list(f.ranks),
+            "instances": f.instances,
+            "accuracy_proxy": ce.family_proxies[f.name],
+        }
+        for f in ce.candidate.families
+    ]
+    rank_report = {
+        "mode": "budget",
+        "accuracy_budget": accuracy_budget,
+        "param_budget_ratio": rres.param_budget_ratio,
+        "n_candidates": len(rres.evals),
+        "frontier": [rres.evals[i].candidate.name for i in rres.frontier],
+        "chosen": chosen_row,
+        "frozen": rows[rres.frozen],
+        "dominates_frozen": rres.dominates_frozen,
+        "improvement_pct": rres.improvement_pct,
+        # vision decompositions are structural (TT-conv) — their rank
+        # rides in the networks, not in an installable plan
+        "plan_embeddable": arch not in VISION_ARCHS,
+        "rank_search_s": rank_search_s,
+        "candidates": sorted(
+            rows, key=lambda r: (r["total_latency_s"], r["name"])),
+    }
+
+    report = {
+        "arch": arch,
+        "hw": hw,
+        "hw_chosen": res.hw.name if res.hw is not None else hw,
+        "hw_search": hw_search_report,
+        "tune": None,
+        "mode": "infer",
+        "objective": "latency",
+        "top_k": top_k,
+        "tokens": rres.tokens,
+        "engine": engine,
+        "strategy": res.strategy,
+        "total_latency_s": total_latency,
+        "total_objective": res.total_latency_s,
+        "search": {
+            "mode": res.search,
+            "budget": search_budget,
+            "seed": search_seed if search == "guided" else None,
+            "evals": sum(e.res.evals for e in rres.evals),
+            "found_at_eval": res.found_at_eval,
+            # per-candidate table sizes differ; scale the chosen
+            # candidate's cell count by the candidate count
+            "exhaustive_evals": (n_space * len(rres.evals)
+                                 * _table_cells(layer_paths,
+                                                ALL_PARTITIONINGS)),
+        },
+        "rank_search": rank_report,
+        "n_layers": len(layers),
+        "timings": {
+            "path_search_s": path_search_s,
+            "table_build_s": tables.build_seconds,
+            "argmin_s": rank_search_s,
+            "rank_search_s": rank_search_s,
+        },
+        "table": {
+            "n_cells": len(seconds_table),
+            "n_unique_gemm_evals": tables.n_unique_gemm_evals,
+            "n_unique_layers": tables.n_unique_layers,
+        },
+        "layers": layers,
+    }
+    return report, named, res, plan_hw, None, None
+
+
 # ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
@@ -913,6 +1189,20 @@ def _build_parser() -> argparse.ArgumentParser:
     p.add_argument("--search-seed", type=int, default=0, metavar="SEED",
                    help="RNG seed of the guided proposal stream (same seed "
                         "-> bit-identical result; default 0)")
+    p.add_argument("--rank-search", default="off", choices=RANK_SEARCH_MODES,
+                   help="off: frozen TT decomposition (default); budget: "
+                        "search the decomposition (modes-per-side x rank "
+                        "ladder per projection family, repro.rank) jointly "
+                        "with the mapping axes under a parameter budget — "
+                        "the report gains a rank_search frontier section "
+                        "and --emit-plan embeds the chosen factorizations "
+                        "(plan v4)")
+    p.add_argument("--accuracy-budget", type=float, default=None,
+                   metavar="EPS",
+                   help="cap the chosen candidate's accuracy proxy "
+                        "(relative TT-SVD reconstruction error) at EPS "
+                        "(default: no worse than the frozen decomposition; "
+                        "requires --rank-search budget)")
     p.add_argument("--top-k", type=int, default=4, metavar="K",
                    help="candidate paths kept per layer (default 4)")
     p.add_argument("--objective", default="latency", choices=OBJECTIVES,
@@ -1027,6 +1317,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         _build_parser().error("--search-budget requires --search guided")
     if args.tune_cache is not None and args.tune == "off":
         _build_parser().error("--tune-cache requires --tune cache|measure")
+    if args.accuracy_budget is not None and args.rank_search == "off":
+        _build_parser().error("--accuracy-budget requires --rank-search "
+                              "budget")
+    if args.rank_search != "off" and args.emit_plan_pair:
+        _build_parser().error(
+            "--rank-search with --emit-plan-pair would search a different "
+            "decomposition per phase; factorizations set parameter shapes, "
+            "so a serving pair must share one (use --emit-plan)")
     try:
         if args.emit_plan_pair:
             common = dict(
@@ -1077,6 +1375,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 search=args.search,
                 search_budget=args.search_budget,
                 search_seed=args.search_seed,
+                rank_search=args.rank_search,
+                accuracy_budget=args.accuracy_budget,
             )
             plan.save(args.emit_plan)
             backends = sorted({lp.backend for lp in plan.layers})
@@ -1106,6 +1406,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 search=args.search,
                 search_budget=args.search_budget,
                 search_seed=args.search_seed,
+                rank_search=args.rank_search,
+                accuracy_budget=args.accuracy_budget,
             )
     except (KeyError, ValueError) as e:
         msg = e.args[0] if e.args else e

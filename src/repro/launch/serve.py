@@ -146,7 +146,11 @@ def main(argv=None) -> int:
     reset_execution_log()
     t0 = time.perf_counter()
     with use_rules(rules):
-        params = api(cfg).init_params(jax.random.PRNGKey(0))
+        # install a plan before init: v4 plans embed searched
+        # factorizations, which set the TT parameter shapes themselves
+        init_plan = prefill_plan if prefill_plan is not None else decode_plan
+        m = api(cfg, plan=init_plan) if init_plan is not None else api(cfg)
+        params = m.init_params(jax.random.PRNGKey(0))
         try:
             engine = ServeEngine(
                 cfg, params, n_slots=args.batch, max_seq=max_seq,

@@ -3,7 +3,9 @@
 from .linear import (
     LinearSpec,
     TTConfig,
+    capture_activation_rms,
     install_plan,
+    installed_factorizations,
     linear_apply,
     linear_flops,
     linear_init,
@@ -34,7 +36,8 @@ from .rwkv import (
 from .ssm import SSMSpec, SSMState, init_ssm_state, ssm_apply, ssm_init
 
 __all__ = [
-    "LinearSpec", "TTConfig", "install_plan", "linear_apply", "linear_flops",
+    "LinearSpec", "TTConfig", "capture_activation_rms", "install_plan",
+    "installed_factorizations", "linear_apply", "linear_flops",
     "linear_init", "plan_context", "planned_layer", "planned_path_index",
     "AttentionSpec", "KVCache", "attention_apply", "attention_init",
     "init_kv_cache",

@@ -78,9 +78,20 @@ class TTConfig:
         )
 
 
+#: a per-layer TT factorization override: (out_modes, in_modes, ranks)
+FactorizationTriple = tuple[tuple[int, ...], tuple[int, ...], tuple[int, ...]]
+
+
 @dataclasses.dataclass(frozen=True)
 class LinearSpec:
-    """Static description of one projection."""
+    """Static description of one projection.
+
+    ``factorization`` overrides the TTConfig-derived (out_modes,
+    in_modes, ranks) for this one projection — the per-family handle the
+    rank search (``repro.rank``) turns; when unset, a model-level
+    override installed from a v4 plan (:data:`_FACTORIZATION`) applies,
+    and otherwise the modes/ranks derive from the model-wide ``tt``.
+    """
 
     name: str
     d_in: int
@@ -88,24 +99,64 @@ class LinearSpec:
     bias: bool = False
     tag: str = "mlp"                # attn | mlp | head | embed | other
     tt: Optional[TTConfig] = None
+    factorization: Optional[FactorizationTriple] = None
 
     @property
     def tensorized(self) -> bool:
         return self.tt is not None and self.tt.applies(self.tag, self.d_in, self.d_out)
 
+    def _factor(self) -> Optional[FactorizationTriple]:
+        if self.factorization is not None:
+            return self.factorization
+        return _FACTORIZATION.get(self.name)
+
+    def with_factorization(
+        self,
+        out_modes: Sequence[int],
+        in_modes: Sequence[int],
+        ranks: Sequence[int],
+    ) -> "LinearSpec":
+        """A copy pinned to an explicit (out_modes, in_modes, ranks)."""
+        out_modes = tuple(int(m) for m in out_modes)
+        in_modes = tuple(int(m) for m in in_modes)
+        ranks = tuple(int(r) for r in ranks)
+        if math.prod(out_modes) != self.d_out:
+            raise ValueError(
+                f"{self.name}: out_modes {out_modes} do not factor "
+                f"d_out={self.d_out}")
+        if math.prod(in_modes) != self.d_in:
+            raise ValueError(
+                f"{self.name}: in_modes {in_modes} do not factor "
+                f"d_in={self.d_in}")
+        if len(ranks) != len(out_modes) + len(in_modes) - 1:
+            raise ValueError(
+                f"{self.name}: need {len(out_modes) + len(in_modes) - 1} "
+                f"interior ranks, got {len(ranks)}")
+        return dataclasses.replace(
+            self, factorization=(out_modes, in_modes, ranks))
+
     @property
     def in_modes(self) -> tuple[int, ...]:
+        f = self._factor()
+        if f is not None:
+            return f[1]
         assert self.tt is not None
         return factorize(self.d_in, self.tt.d)
 
     @property
     def out_modes(self) -> tuple[int, ...]:
+        f = self._factor()
+        if f is not None:
+            return f[0]
         assert self.tt is not None
         return factorize(self.d_out, self.tt.d)
 
     @property
     def tt_ranks(self) -> tuple[int, ...]:
         """Interior ranks, clipped to the full-rank bound at each cut."""
+        f = self._factor()
+        if f is not None:
+            return f[2]
         assert self.tt is not None
         modes = self.out_modes + self.in_modes
         ranks = []
@@ -146,6 +197,18 @@ def _topk_paths_cached(
 
 _PLAN: dict[str, object] = {}  # linear name -> LayerPlan (from the DSE plan)
 
+#: linear name -> (out_modes, in_modes, ranks) from a v4 plan's searched
+#: factorizations.  Unlike _PLAN (swapped per serving phase), this
+#: determines *parameter shapes* — a plan pair must carry identical
+#: factorizations on both halves (the serve engine enforces it) and the
+#: plan must be installed before ``init_params``.
+_FACTORIZATION: dict[str, FactorizationTriple] = {}
+
+
+def installed_factorizations() -> dict[str, FactorizationTriple]:
+    """Snapshot of the model-level factorization overrides (name -> triple)."""
+    return dict(_FACTORIZATION)
+
 
 def install_plan(plan, *, force_backend: Optional[str] = None) -> None:
     """Install an :class:`repro.plan.ExecutionPlan` (or ``None`` to clear).
@@ -170,10 +233,15 @@ def install_plan(plan, *, force_backend: Optional[str] = None) -> None:
         raise ValueError(
             f"unknown force_backend {force_backend!r}; have {BACKENDS}")
     _PLAN.clear()
+    _FACTORIZATION.clear()
     if plan is None:
         return
     if isinstance(plan, ExecutionPlan):
         entries = {lp.name: lp for lp in plan.layers}
+        _FACTORIZATION.update({
+            lp.name: lp.factorization.triple
+            for lp in plan.layers if lp.factorization is not None
+        })
     elif isinstance(plan, dict):
         entries = {
             name: LayerPlan(name=name, path_index=int(idx), path_steps=(),
@@ -211,12 +279,39 @@ def plan_context(plan, *, force_backend: Optional[str] = None) -> Iterator[None]
     plans before the first trace of a shape, as with ``install_plan``.
     """
     saved = dict(_PLAN)
+    saved_fact = dict(_FACTORIZATION)
     install_plan(plan, force_backend=force_backend)
     try:
         yield
     finally:
         _PLAN.clear()
         _PLAN.update(saved)
+        _FACTORIZATION.clear()
+        _FACTORIZATION.update(saved_fact)
+
+
+_CAPTURE: Optional[dict[str, list[float]]] = None
+
+
+@contextlib.contextmanager
+def capture_activation_rms() -> Iterator[dict[str, float]]:
+    """Record per-projection input RMS during *eager* forward passes.
+
+    Feeds the rank search's optional activation-weighted accuracy proxy
+    (``repro.rank.proxy.activation_calibration``): families whose inputs
+    run hot contribute more to the model-level reconstruction error.
+    Traced (jit) calls are skipped — run the calibration batch eagerly.
+    The yielded dict is filled with ``{name: mean input RMS}`` on exit.
+    """
+    global _CAPTURE
+    saved, _CAPTURE = _CAPTURE, {}
+    out: dict[str, float] = {}
+    try:
+        yield out
+    finally:
+        rec, _CAPTURE = _CAPTURE, saved
+        for name, vals in rec.items():
+            out[name] = float(np.mean(vals))
 
 
 def _has_pallas_backward(lp) -> bool:
@@ -276,6 +371,9 @@ def linear_apply(
     if not spec.tensorized:
         y = jnp.einsum("...i,io->...o", x, params["w"])
     else:
+        if _CAPTURE is not None and not isinstance(x, jax.core.Tracer):
+            _CAPTURE.setdefault(spec.name, []).append(float(
+                jnp.sqrt(jnp.mean(jnp.square(x.astype(jnp.float32))))))
         lp = planned_layer(spec.name) if path_index is None else None
         n_cores = len(spec.out_modes) + len(spec.in_modes)
         if lp is not None and _single_device() and (

@@ -14,6 +14,7 @@ from .schema import (
     TILING_MODES,
     BackwardOp,
     ExecutionPlan,
+    Factorization,
     LayerPlan,
     Tiling,
     load_plan,
@@ -40,7 +41,8 @@ __all__ = [
     "BACKENDS", "PHASES", "PLAN_FORMAT_VERSION", "SUPPORTED_VERSIONS",
     "TILING_MODES",
     "BackwardOp",
-    "ExecutionPlan", "LayerPlan", "Tiling", "load_plan", "migrate_plan_json",
+    "ExecutionPlan", "Factorization", "LayerPlan", "Tiling", "load_plan",
+    "migrate_plan_json",
     "base_name", "batch_dim", "check_plan_for_config", "compile_plan",
     "streaming_fits", "validate_plan",
     "as_candidate_path", "execution_log", "execution_stream",

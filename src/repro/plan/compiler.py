@@ -35,7 +35,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Optional, Sequence
+from typing import Mapping, Optional, Sequence
 
 from repro.core.backward import backward_networks
 from repro.core.dse import DSEResult, LayerChoice
@@ -49,6 +49,7 @@ from .schema import (
     TILING_MODES,
     BackwardOp,
     ExecutionPlan,
+    Factorization,
     LayerPlan,
     Tiling,
 )
@@ -259,12 +260,46 @@ def _choose_bwd_backend(
     return "tt_gemm"
 
 
+def _cached_bwd_tiling(
+    net: TensorNetwork,
+    ch,
+    tiling: Tiling,
+    be: str,
+    dataflow: str,
+    tokens: int,
+    tuner,
+) -> Tiling:
+    """Measured backward-op tiling from the tuner's cache *only*.
+
+    Train-mode plans may reuse measurements the forward sweeps already
+    deposited (the cache is keyed by GEMM problem, not by direction), but
+    backward ops never trigger new measurements — a cache miss keeps the
+    analytic heuristic.
+    """
+    if be == "tt_gemm":
+        g = max(ch.path.gemms, key=lambda g: g.macs)
+        blocks = tuner.cached_gemm_blocks(int(g.M), int(g.K), int(g.N),
+                                          dataflow)
+        if blocks is not None:
+            bm, bk, bn = blocks
+            return dataclasses.replace(tiling, block_m=bm, block_k=bk,
+                                       block_n=bn)
+    elif be == "streaming_tt":
+        bt = tuner.cached_streaming_tokens(net, ch.path.steps, tokens)
+        if bt is not None:
+            return dataclasses.replace(tiling, block_tokens=bt)
+    return tiling
+
+
 def _compile_backward(
     tn: TensorNetwork,
     choice: LayerChoice,
     tokens: int,
     backend: str,
     hw: Optional[HardwareConfig] = None,
+    *,
+    tilings: str = "heuristic",
+    tuner=None,
 ) -> tuple[BackwardOp, ...]:
     """BackwardOps from a train-DSE choice (empty for inference results)."""
     if not choice.backward:
@@ -280,6 +315,10 @@ def _compile_backward(
             be = "tt_gemm"  # weight grads cannot stream; closest kernel
         else:
             be = backend
+        if tilings == "measured" and tuner is not None:
+            tiling = _cached_bwd_tiling(net, ch, tiling, be,
+                                        choice.dataflow.value,
+                                        tokens or batch_dim(tn), tuner)
         ops.append(BackwardOp(
             wrt=ch.wrt,
             path_index=ch.path_index,
@@ -302,6 +341,23 @@ def _steps_in_range(n_nodes: int, steps) -> bool:
     return n == 1
 
 
+def _model_dims(tn: TensorNetwork) -> tuple[int, int]:
+    """(d_in, d_out) of the projection a TT-linear network computes.
+
+    The input node's *shared* edges are the input modes (their product is
+    ``d_in``), and the free edges of the core nodes are the output modes
+    (their product is ``d_out``).  Both products are invariant under
+    re-factorization, so they identify the projection regardless of which
+    decomposition the network was built with.
+    """
+    x = _input_node(tn)
+    free = set(tn.free_edges)
+    d_in = math.prod(d for e, d in zip(x.edges, x.dims) if e not in free)
+    d_out = math.prod(d for n in tn.nodes if n.kind != "input"
+                      for e, d in zip(n.edges, n.dims) if e in free)
+    return d_in, d_out
+
+
 def validate_plan(
     plan,
     named_layers: Sequence[tuple[str, TensorNetwork]],
@@ -310,10 +366,16 @@ def validate_plan(
 
     Returns human-readable problem strings (empty = compatible): a plan
     layer whose step count cannot contract the model's network (emitted
-    for a different TT geometry / smoke setting), or a plan that matches
-    no projection at all.  Called by the serve/train drivers before
-    installing — a mismatched plan should fail loudly, not replay bogus
-    steps deep inside tracing.
+    for a different TT geometry / smoke setting), a v4 factorization
+    whose modes do not factor the model's projection dims, or a plan
+    that matches no projection at all.  Called by the serve/train
+    drivers before installing — a mismatched plan should fail loudly,
+    not replay bogus steps deep inside tracing.
+
+    Layers carrying a v4 ``factorization`` are checked against the
+    geometry the plan *itself* prescribes (the installed plan overrides
+    the model's default decomposition, so the model network's node count
+    is not the reference for them — only its projection dims are).
     """
     families: dict[str, TensorNetwork] = {}
     for inst_name, tn in named_layers:
@@ -325,6 +387,21 @@ def validate_plan(
         if tn is None:
             continue  # plans may cover projections this model lacks
         matched += 1
+        if lp.factorization is not None:
+            f = lp.factorization
+            d_in, d_out = _model_dims(tn)
+            if (math.prod(f.in_modes) != d_in
+                    or math.prod(f.out_modes) != d_out):
+                problems.append(
+                    f"{lp.name}: plan factorization "
+                    f"{list(f.out_modes)}x{list(f.in_modes)} does not factor "
+                    f"the model's {d_out}x{d_in} projection "
+                    "(plan emitted for a different arch or smoke setting?)")
+                continue
+            # the factorized network: one node per core plus the input
+            want_nodes = len(f.out_modes) + len(f.in_modes) + 1
+        else:
+            want_nodes = len(tn.nodes)
         if not lp.path_steps:
             if lp.backend == "jnp":
                 continue  # index-only entry: steps resolve at trace time
@@ -332,17 +409,17 @@ def validate_plan(
                 f"{lp.name}: backend {lp.backend!r} requires path_steps "
                 "(only jnp entries may be index-only)")
             continue
-        if len(lp.path_steps) != len(tn.nodes) - 1:
+        if len(lp.path_steps) != want_nodes - 1:
             problems.append(
                 f"{lp.name}: plan has {len(lp.path_steps)} contraction steps "
-                f"but the model's network needs {len(tn.nodes) - 1} "
+                f"but the model's network needs {want_nodes - 1} "
                 "(plan emitted for a different TT geometry or smoke setting?)")
-        elif not _steps_in_range(len(tn.nodes), lp.path_steps):
+        elif not _steps_in_range(want_nodes, lp.path_steps):
             problems.append(
                 f"{lp.name}: plan step indices {list(map(list, lp.path_steps))} "
                 "do not describe a valid pairwise contraction of "
-                f"{len(tn.nodes)} nodes (corrupted or hand-edited plan?)")
-        if lp.backward:
+                f"{want_nodes} nodes (corrupted or hand-edited plan?)")
+        if lp.backward and lp.factorization is None:
             want = {"dx"} | {n.name for n in tn.nodes if n.kind != "input"}
             got = {op.wrt for op in lp.backward}
             if got != want:
@@ -354,15 +431,15 @@ def validate_plan(
         # the forward (one node swapped for / replaced by dY), so the same
         # step-count check applies
         for op in lp.backward:
-            if len(op.path_steps) != len(tn.nodes) - 1:
+            if len(op.path_steps) != want_nodes - 1:
                 problems.append(
                     f"{lp.name}: backward[{op.wrt}] has {len(op.path_steps)} "
                     f"steps but the gradient network needs "
-                    f"{len(tn.nodes) - 1}")
-            elif not _steps_in_range(len(tn.nodes), op.path_steps):
+                    f"{want_nodes - 1}")
+            elif not _steps_in_range(want_nodes, op.path_steps):
                 problems.append(
                     f"{lp.name}: backward[{op.wrt}] step indices are not a "
-                    f"valid pairwise contraction of {len(tn.nodes)} nodes")
+                    f"valid pairwise contraction of {want_nodes} nodes")
     if matched == 0:
         problems.append(
             "plan matches no tensorized projection of this model "
@@ -398,8 +475,14 @@ def check_plan_for_config(plan, arch: str, cfg,
                 "--plan-decode?)")
     from repro.dse_cli import model_dse_layers
 
+    # a v4 plan's factorizations define the networks it executes over —
+    # rebuild the model's problems under them so path/step validation
+    # runs against the decomposition the plan was actually compiled for
+    fact = {lp.name: lp.factorization.triple
+            for lp in plan.layers if lp.factorization is not None}
     try:
-        named = model_dse_layers(cfg, tokens=8)
+        named = model_dse_layers(cfg, tokens=8,
+                                 factorizations=fact or None)
     except ValueError as e:
         problems.append(str(e.args[0] if e.args else e))
         return problems
@@ -420,6 +503,7 @@ def compile_plan(
     tilings: str = "heuristic",
     phase: str = "",
     tuner=None,
+    factorizations: Optional[Mapping[str, Factorization]] = None,
 ) -> ExecutionPlan:
     """Compile a DSE result into an installable :class:`ExecutionPlan`.
 
@@ -444,6 +528,11 @@ def compile_plan(
     --emit-plan-pair`` compiles one plan per phase, searched at that
     phase's token count, and the serve driver checks the stamp before
     installing.
+
+    ``factorizations`` maps projection-family names to the searched TT
+    decomposition (schema v4, from ``repro.rank``): the named layers
+    must already have been built *under* that factorization — the
+    compiler records it, it does not re-derive networks.
     """
     if backend != "auto" and backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; have {('auto',) + BACKENDS}")
@@ -494,7 +583,10 @@ def compile_plan(
             partitioning=tuple(choice.partitioning),
             backend=be,
             tiling=tiling,
-            backward=_compile_backward(tn, choice, tokens, backend, tile_hw),
+            backward=_compile_backward(tn, choice, tokens, backend, tile_hw,
+                                       tilings=tilings, tuner=tuner),
+            factorization=(factorizations.get(name)
+                           if factorizations is not None else None),
             macs=choice.path.macs,
             latency_s=choice.latency_s,
             bwd_latency_s=choice.bwd_latency_s,

@@ -31,12 +31,15 @@ from repro.hw import HW_TARGETS, HardwareConfig
 #: current wire-format version.  v2 added per-layer *backward* entries
 #: (training-aware plans); v3 embeds the full hardware architecture the
 #: plan was searched for (``hardware`` — the co-searched winner under
-#: ``--hw-search``, else the named target).  Older files are migrated on
-#: load — see :func:`migrate_plan_json`.
-PLAN_FORMAT_VERSION = 3
+#: ``--hw-search``, else the named target); v4 embeds the searched TT
+#: *factorization* per layer (``factorization`` — modes + ranks +
+#: accuracy proxy from ``repro.rank``; ``null`` = the model's frozen
+#: TTConfig decomposition).  Older files are migrated on load — see
+#: :func:`migrate_plan_json`.
+PLAN_FORMAT_VERSION = 4
 
 #: versions :func:`ExecutionPlan.from_json` accepts (older ones migrate up)
-SUPPORTED_VERSIONS = (1, 2, 3)
+SUPPORTED_VERSIONS = (1, 2, 3, 4)
 
 #: executor backends a layer plan may name
 BACKENDS = ("jnp", "tt_gemm", "streaming_tt")
@@ -138,6 +141,62 @@ class BackwardOp:
 
 
 @dataclasses.dataclass(frozen=True)
+class Factorization:
+    """The searched TT decomposition of one projection (schema v4).
+
+    Emitted by the rank search (``repro.rank``): the weight matrix is
+    reshaped to ``out_modes x in_modes`` and decomposed with the
+    ``ranks`` interior TT ranks.  Installing a plan that carries
+    factorizations overrides the model's TTConfig-derived core shapes —
+    parameter shapes change, so a factorized plan must be installed
+    *before* ``init_params`` (``models.api(cfg, plan=...)``).
+    ``accuracy_proxy`` is provenance: the candidate's weighted relative
+    reconstruction error at search time.
+    """
+
+    out_modes: tuple[int, ...]
+    in_modes: tuple[int, ...]
+    ranks: tuple[int, ...]
+    accuracy_proxy: float = 0.0
+
+    def __post_init__(self) -> None:
+        for field, want_pos in (("out_modes", True), ("in_modes", True),
+                                ("ranks", True)):
+            vals = getattr(self, field)
+            if not vals or any(not isinstance(v, int) or v < 1 for v in vals):
+                raise ValueError(
+                    f"factorization.{field} must be positive ints, got {vals!r}")
+        n_cuts = len(self.out_modes) + len(self.in_modes) - 1
+        if len(self.ranks) != n_cuts:
+            raise ValueError(
+                f"factorization needs {n_cuts} interior ranks for "
+                f"{len(self.out_modes)}+{len(self.in_modes)} modes, "
+                f"got {len(self.ranks)}")
+
+    @property
+    def triple(self) -> tuple[tuple[int, ...], tuple[int, ...], tuple[int, ...]]:
+        """(out_modes, in_modes, ranks) — the ``LinearSpec`` override form."""
+        return (self.out_modes, self.in_modes, self.ranks)
+
+    def to_json(self) -> dict:
+        return {
+            "out_modes": list(self.out_modes),
+            "in_modes": list(self.in_modes),
+            "ranks": list(self.ranks),
+            "accuracy_proxy": self.accuracy_proxy,
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "Factorization":
+        return cls(
+            out_modes=tuple(int(m) for m in d["out_modes"]),
+            in_modes=tuple(int(m) for m in d["in_modes"]),
+            ranks=tuple(int(r) for r in d["ranks"]),
+            accuracy_proxy=float(d.get("accuracy_proxy", 0.0)),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class LayerPlan:
     """Deployment decision for one projection family.
 
@@ -158,6 +217,10 @@ class LayerPlan:
     #: v2: searched backward contractions (empty = inference-only plan;
     #: the executor then derives default backward paths at trace time)
     backward: tuple = ()               # tuple[BackwardOp, ...]
+    #: v4: the searched TT decomposition (None = the model's frozen
+    #: TTConfig factorization) — installed as a per-layer core-shape
+    #: override, so it changes parameter shapes (see Factorization)
+    factorization: Optional[Factorization] = None
     # provenance (not used by the executor)
     macs: int = 0
     latency_s: float = 0.0
@@ -182,6 +245,19 @@ class LayerPlan:
         wrts = [op.wrt for op in self.backward]
         if len(set(wrts)) != len(wrts):
             raise ValueError(f"{self.name}: duplicate backward wrt entries")
+        if self.factorization is not None:
+            if not isinstance(self.factorization, Factorization):
+                raise ValueError(
+                    f"{self.name}: factorization must be a Factorization, "
+                    f"got {type(self.factorization).__name__}")
+            f = self.factorization
+            # the layer network has one node per core plus the input, so a
+            # full contraction takes exactly n_cores pairwise steps
+            want = len(f.out_modes) + len(f.in_modes)
+            if self.path_steps and len(self.path_steps) != want:
+                raise ValueError(
+                    f"{self.name}: {len(self.path_steps)} path steps but the "
+                    f"factorization has {want} cores")
 
     def with_backend(self, backend: str) -> "LayerPlan":
         """Force every contraction of the layer — forward AND backward —
@@ -208,6 +284,8 @@ class LayerPlan:
             "backend": self.backend,
             "tiling": self.tiling.to_json(),
             "backward": [op.to_json() for op in self.backward],
+            "factorization": (self.factorization.to_json()
+                              if self.factorization is not None else None),
             "macs": self.macs,
             "latency_s": self.latency_s,
             "bwd_latency_s": self.bwd_latency_s,
@@ -226,6 +304,8 @@ class LayerPlan:
             tiling=Tiling.from_json(d["tiling"]),
             backward=tuple(BackwardOp.from_json(b)
                            for b in d.get("backward", [])),
+            factorization=(Factorization.from_json(d["factorization"])
+                           if d.get("factorization") is not None else None),
             macs=int(d.get("macs", 0)),
             latency_s=float(d.get("latency_s", 0.0)),
             bwd_latency_s=float(d.get("bwd_latency_s", 0.0)),
@@ -359,7 +439,9 @@ def migrate_plan_json(d: Mapping) -> dict:
     plan.  v2 -> v3: the plan gains a ``hardware`` object resolved from
     its ``hw`` target name through the ``repro.hw`` registry (``null``
     when the name is unregistered — the plan still installs; only the
-    embedded-architecture provenance is missing).  Each migration is
+    embedded-architecture provenance is missing).  v3 -> v4: every layer
+    gains ``"factorization": null`` — a pre-rank-search plan runs the
+    model's frozen TTConfig decomposition.  Each migration is
     deterministic, so ``loads(old).dumps()`` -> ``loads(...)`` ->
     ``dumps()`` is bit-stable (the round-trip property
     ``tests/test_plan.py`` asserts).
@@ -382,6 +464,14 @@ def migrate_plan_json(d: Mapping) -> dict:
         if out.get("hardware") is None:
             target = HW_TARGETS.get(str(d.get("hw", "")))
             out["hardware"] = target.to_json() if target is not None else None
+        return migrate_plan_json(out)
+    if version == 3:
+        out = dict(d)
+        out["version"] = 4
+        out["layers"] = [
+            {**layer, "factorization": layer.get("factorization")}
+            for layer in d["layers"]
+        ]
         return out
     raise ValueError(f"cannot migrate plan version {version}")
 

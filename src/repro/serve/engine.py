@@ -85,6 +85,31 @@ class ServeEngine:
                     raise ValueError(
                         f"{phase} plan rejected for arch {arch!r}:\n  "
                         + "\n  ".join(problems))
+        # v4 factorizations set parameter *shapes*: both phases contract
+        # the same params, so a searched decomposition must be identical
+        # across the pair and present on both halves
+        fact = {
+            phase: {lp.name: lp.factorization.triple
+                    for lp in plan.layers if lp.factorization is not None}
+            for plan, phase in ((prefill_plan, "prefill"),
+                                (decode_plan, "decode"))
+            if plan is not None
+        }
+        if any(fact.values()):
+            if prefill_plan is None or decode_plan is None:
+                raise ValueError(
+                    "a plan with searched factorizations (schema v4) must "
+                    "install for BOTH phases: the unplanned phase would "
+                    "contract default-decomposition networks over "
+                    "factorized params")
+            if fact["prefill"] != fact["decode"]:
+                diff = sorted(
+                    set(fact["prefill"].items())
+                    ^ set(fact["decode"].items()))
+                raise ValueError(
+                    "prefill/decode plans carry different factorizations "
+                    f"({[n for n, _ in diff]}); a serving pair shares one "
+                    "decomposition (it defines the parameter shapes)")
         self.cfg = cfg
         self.params = params
         self.n_slots = int(n_slots)

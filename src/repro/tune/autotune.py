@@ -143,6 +143,28 @@ class Autotuner:
         self.n_measured += 1
         return s
 
+    # -- cache-only lookups (no measuring) ---------------------------------
+    def cached_gemm_blocks(
+        self, M: int, K: int, N: int, dataflow: str
+    ) -> Optional[tuple[int, ...]]:
+        """Best *already-measured* blocks for one GEMM problem, or None.
+
+        Never measures: the plan compiler uses this for backward-op
+        tilings (train plans reuse forward measurements when the cache
+        holds them, analytic heuristic otherwise — ROADMAP gap b).
+        """
+        entry = self.cache.get(self.gemm_key(M, K, N, dataflow))
+        return entry.best_blocks if entry is not None else None
+
+    def cached_streaming_tokens(
+        self, tn: TensorNetwork, steps, tokens: int
+    ) -> Optional[int]:
+        """Best already-measured ``block_tokens`` for one streaming
+        problem, or None (cache-only — see :meth:`cached_gemm_blocks`)."""
+        entry = self.cache.get(self.streaming_key(tn, steps, tokens))
+        blocks = entry.best_blocks if entry is not None else None
+        return blocks[0] if blocks else None
+
     def gemm_seconds(self, M: int, K: int, N: int, dataflow: str,
                      blocks: tuple[int, int, int]) -> float:
         """Measured seconds of one (shape, dataflow, tiling) variant."""

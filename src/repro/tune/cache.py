@@ -202,3 +202,57 @@ class TuningCache:
         if os.path.exists(path):
             return cls.load(path)
         return cls()
+
+
+def entry_fingerprint(key: str) -> Optional[str]:
+    """The kernel-source hash embedded in a cache key, or None.
+
+    Keys end in ``:k<hash>`` since PR 7 (the staleness guard); older
+    keys carry no fingerprint and are treated as stale by the merger.
+    """
+    _, sep, tail = key.rpartition(":k")
+    if not sep or not tail or not all(c in "0123456789abcdef" for c in tail):
+        return None
+    return tail
+
+
+def merge_caches(
+    caches: Sequence["TuningCache"],
+    *,
+    fingerprint: Optional[str] = None,
+) -> tuple["TuningCache", int]:
+    """Union tuning caches from several hosts into one (ROADMAP gap d).
+
+    Entries merge per problem key; colliding *variant* measurements
+    resolve last-writer-wins (later caches in the sequence override
+    earlier ones — pass them oldest-first), as does the entry's
+    provenance metadata.  Entries whose key carries a kernel-source
+    fingerprint different from ``fingerprint`` (default: the current
+    :func:`kernel_fingerprint`) were measured through edited kernels —
+    they are dropped rather than merged.  Returns ``(merged,
+    n_dropped)``.
+
+    Distinct machines never collide by construction (device kind and
+    interpret flag are part of the key), so merging caches from a
+    heterogeneous fleet is lossless.
+    """
+    if fingerprint is None:
+        fingerprint = kernel_fingerprint()
+    merged: dict[str, TuningEntry] = {}
+    dropped = 0
+    for cache in caches:
+        for key, e in cache.entries.items():
+            if entry_fingerprint(key) != fingerprint:
+                dropped += 1
+                continue
+            prev = merged.get(key)
+            if prev is None:
+                merged[key] = dataclasses.replace(
+                    e, problem=dict(e.problem),
+                    measured_s=dict(e.measured_s))
+            else:
+                # last writer wins on identical variant keys AND metadata
+                measured = {**prev.measured_s, **e.measured_s}
+                merged[key] = dataclasses.replace(
+                    e, problem=dict(e.problem), measured_s=measured)
+    return TuningCache(merged), dropped

@@ -39,7 +39,13 @@ from .autotune import (
     gemm_work_items,
     measured_calibration,
 )
-from .cache import DEFAULT_CACHE_PATH, TuningCache, variant_key
+from .cache import (
+    DEFAULT_CACHE_PATH,
+    TuningCache,
+    kernel_fingerprint,
+    merge_caches,
+    variant_key,
+)
 
 
 def run_tune(
@@ -161,6 +167,41 @@ def _speedup(entry, heuristic_variant: tuple[int, ...]) -> Optional[float]:
     return h / b
 
 
+def _build_merge_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.tune merge",
+        description="Union tuning caches from several hosts into one "
+                    "(last-writer-wins on identical keys; entries measured "
+                    "through edited kernel sources are dropped).",
+    )
+    p.add_argument("caches", nargs="+", metavar="CACHE.json",
+                   help="cache files to merge, oldest first (later files "
+                        "win on colliding measurements)")
+    p.add_argument("-o", "--out", required=True, metavar="PATH",
+                   help="merged cache destination")
+    p.add_argument("--fingerprint", default=None, metavar="HASH",
+                   help="accept entries with this kernel-source hash "
+                        "(default: the current working tree's)")
+    return p
+
+
+def run_merge(argv: Sequence[str]) -> int:
+    args = _build_merge_parser().parse_args(argv)
+    try:
+        caches = [TuningCache.load(p) for p in args.caches]
+    except (OSError, ValueError) as e:
+        print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
+        return 2
+    fp = args.fingerprint or kernel_fingerprint()
+    merged, dropped = merge_caches(caches, fingerprint=fp)
+    merged.save(args.out)
+    total_in = sum(len(c) for c in caches)
+    print(f"merged {len(args.caches)} caches ({total_in} entries) -> "
+          f"{args.out}: {len(merged)} entries kept, {dropped} dropped "
+          f"(fingerprint mismatch vs k{fp})", file=sys.stderr)
+    return 0
+
+
 def _build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.tune",
@@ -194,6 +235,10 @@ def _build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "merge":
+        return run_merge(list(argv[1:]))
     args = _build_parser().parse_args(argv)
     try:
         report = run_tune(

@@ -100,7 +100,7 @@ def test_hw_search_emit_plan_v3_tilings():
 
     report, plan = run_dse_plan("tt-lm-100m", smoke=True, top_k=2,
                                 tokens=32, hw_search="budget")
-    assert plan.version == 3
+    assert plan.version == 4
     assert plan.hardware is not None
     assert plan.hardware.name == report["hw_search"]["chosen"]["name"]
     assert plan.hw == plan.hardware.name
@@ -171,7 +171,7 @@ def test_mode_train_report_and_plan():
     assert report["total_latency_s"] == pytest.approx(
         report["total_fwd_latency_s"] + report["total_bwd_latency_s"]
         + report["total_update_latency_s"], rel=1e-12)
-    assert plan.version == 3
+    assert plan.version == 4
     assert all(lp.backward for lp in plan.layers)
     assert plan.objective == "train-latency"
 

@@ -96,7 +96,7 @@ def test_v1_plan_migrates_to_current_bit_equal(tmp_path):
     migrated = ExecutionPlan.loads(v1_text)
     from repro.plan import PLAN_FORMAT_VERSION
 
-    assert migrated.version == PLAN_FORMAT_VERSION == 3
+    assert migrated.version == PLAN_FORMAT_VERSION == 4
     assert all(lp.backward == () for lp in migrated.layers)
     # everything but the version/backward/hardware fields survives untouched
     assert migrated.names == plan.names
@@ -125,7 +125,7 @@ def test_v2_plan_migrates_to_v3_with_registry_hardware():
     v2_text = json.dumps(d, indent=2, sort_keys=True) + "\n"
 
     migrated = ExecutionPlan.loads(v2_text)
-    assert migrated.version == 3
+    assert migrated.version == 4
     assert migrated.hardware == get_target("fpga_vu9p")
     text = migrated.dumps()
     assert ExecutionPlan.loads(text).dumps() == text
@@ -144,7 +144,7 @@ def test_v3_plan_embeds_searched_hardware():
     from repro.hw import FPGA_VU9P as BASE
 
     _, _, _, plan = _unit_problem()
-    assert plan.version == 3
+    assert plan.version == 4
     assert plan.hardware == BASE
     again = ExecutionPlan.loads(plan.dumps())
     assert again.hardware == plan.hardware

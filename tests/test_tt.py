@@ -46,6 +46,40 @@ def test_tt_rand_rank_clipping():
     assert tt.to_matrix().shape == (16, 16)
 
 
+# factor tuples paired with matched weight shapes so every drawn case
+# is a valid (out_modes, in_modes) split of its matrix
+_MODE_SPLITS = (
+    ((24,), (18,)),
+    ((4, 6), (6, 3)),
+    ((2, 3, 4), (3, 2, 3)),
+    ((8, 4), (2, 2, 8)),
+)
+
+
+@given(st.integers(1, 500), st.sampled_from(_MODE_SPLITS))
+@settings(max_examples=30, deadline=None)
+def test_tt_svd_full_rank_roundtrip_property(seed, split):
+    out_modes, in_modes = split
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(np.prod(out_modes), np.prod(in_modes)))
+    tt = tt_svd(w, out_modes, in_modes, max_rank=10**6)
+    # unbounded rank => TT-SVD is an exact re-layout of w
+    assert reconstruction_error(tt, w) < 1e-10
+    assert np.allclose(tt.to_matrix(), w, atol=1e-10)
+
+
+@given(st.integers(1, 500), st.sampled_from(_MODE_SPLITS))
+@settings(max_examples=30, deadline=None)
+def test_tt_svd_error_monotone_in_rank_property(seed, split):
+    out_modes, in_modes = split
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(np.prod(out_modes), np.prod(in_modes)))
+    errs = [reconstruction_error(tt_svd(w, out_modes, in_modes, max_rank=r), w)
+            for r in (1, 2, 3, 4, 6, 8, 12, 24)]
+    # more rank never hurts: truncation error is non-increasing
+    assert all(errs[i] >= errs[i + 1] - 1e-12 for i in range(len(errs) - 1))
+
+
 @given(st.integers(1, 200))
 @settings(max_examples=30, deadline=None)
 def test_int8_roundtrip_bounded(seed):

@@ -169,6 +169,84 @@ def test_cache_rejects_foreign_json():
         TuningCache.loads('{"format": "repro.tuning_cache", "version": 99}')
 
 
+def test_entry_fingerprint_parsing():
+    from repro.tune import entry_fingerprint
+
+    assert entry_fingerprint("gemm:32:32:32:OS:cpu:i1:kdeadbeef") == "deadbeef"
+    assert entry_fingerprint("gemm:32:32:32:OS:cpu:i1") is None  # pre-PR7 key
+    assert entry_fingerprint("gemm:32:kXYZ") is None             # not hex
+
+
+def test_merge_caches_union_and_last_writer_wins():
+    from repro.tune import entry_fingerprint, merge_caches
+
+    a = _stub_tuner(TuningCache())
+    a.tune_gemm(96, 160, 512, "OS", include=[heuristic_blocks(96, 160, 512)])
+    b = _stub_tuner(TuningCache())
+    b.tune_gemm(96, 160, 512, "OS", include=[heuristic_blocks(96, 160, 512)])
+    b.tune_gemm(64, 64, 64, "IS", include=[heuristic_blocks(64, 64, 64)])
+
+    fp = entry_fingerprint(next(iter(a.cache.entries)))
+    merged, dropped = merge_caches([a.cache, b.cache], fingerprint=fp)
+    assert dropped == 0
+    assert len(merged) == 2  # union: shared key merges, new key added
+    # last writer wins: the colliding entry's measurements come from b
+    key = next(k for k in merged.entries if k in a.cache.entries)
+    assert merged.entries[key].measured_s == b.cache.entries[key].measured_s
+    # merging is idempotent
+    again, _ = merge_caches([merged], fingerprint=fp)
+    assert again.dumps() == merged.dumps()
+
+
+def test_merge_caches_drops_foreign_fingerprints():
+    from repro.tune import merge_caches
+
+    a = _stub_tuner(TuningCache())
+    a.tune_gemm(96, 160, 512, "OS", include=[heuristic_blocks(96, 160, 512)])
+    merged, dropped = merge_caches([a.cache], fingerprint="0" * 12)
+    assert len(merged) == 0 and dropped == 1
+
+
+def test_merge_cli_roundtrip(tmp_path, capsys):
+    from repro.tune import entry_fingerprint
+    from repro.tune.cli import run_merge
+
+    a = _stub_tuner(TuningCache())
+    a.tune_gemm(96, 160, 512, "OS", include=[heuristic_blocks(96, 160, 512)])
+    b = _stub_tuner(TuningCache())
+    b.tune_gemm(64, 64, 64, "IS", include=[heuristic_blocks(64, 64, 64)])
+    pa, pb = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    out = str(tmp_path / "merged.json")
+    a.cache.save(pa)
+    b.cache.save(pb)
+
+    fp = entry_fingerprint(next(iter(a.cache.entries)))
+    assert run_merge([pa, pb, "-o", out, "--fingerprint", fp]) == 0
+    merged = TuningCache.load(out)
+    assert len(merged) == 2
+    assert "2 entries kept, 0 dropped" in capsys.readouterr().err
+    # unreadable input is a clean exit-2, not a traceback
+    assert run_merge([str(tmp_path / "missing.json"), "-o", out]) == 2
+
+
+def test_cached_tiling_lookups_never_measure():
+    from repro.plan.compiler import rebatch
+
+    t = _stub_tuner(TuningCache())
+    t.tune_gemm(96, 160, 512, "OS", include=[heuristic_blocks(96, 160, 512)])
+    _, tn, paths, _ = _unit_problem()
+    t.tune_streaming(tn, paths[0].steps, 32, include=[32])
+
+    warm = Autotuner(t.cache, "cache", device_kind="cpu", interpret=True,
+                     measure_gemm_fn=_fail_gemm,
+                     measure_streaming_fn=_fail_streaming)
+    assert warm.cached_gemm_blocks(96, 160, 512, "OS") is not None
+    assert warm.cached_gemm_blocks(97, 160, 512, "OS") is None  # miss: None
+    assert warm.cached_streaming_tokens(tn, paths[0].steps, 32) == 32
+    assert warm.cached_streaming_tokens(rebatch(tn, 64), paths[0].steps,
+                                        64) is None
+
+
 def test_entry_argmin_is_deterministic_on_ties():
     tuner = _stub_tuner()
     key = tuner.gemm_key(64, 64, 64, "OS")
@@ -230,9 +308,9 @@ def test_measured_plan_validates_and_replays_from_cache(tmp_path):
     assert plan.tilings == "measured"
     assert tuner.n_measured > 0
 
-    # schema v3 round-trip: canonical, bit-stable, version preserved
+    # schema round-trip: canonical, bit-stable, version preserved
     d = plan.to_json()
-    assert d["version"] == 3 and d["tilings"] == "measured"
+    assert d["version"] == 4 and d["tilings"] == "measured"
     text = plan.dumps()
     assert ExecutionPlan.loads(text).dumps() == text
 
@@ -389,10 +467,36 @@ def test_run_dse_tune_cache_reports_and_replays(tmp_path, monkeypatch):
 def test_run_dse_tune_rejects_unsupported_combos(tmp_path):
     from repro.dse_cli import run_dse
 
-    with pytest.raises(ValueError, match="analytic-only"):
-        run_dse("tt-lm-100m", smoke=True, mode="train", tune="cache")
+    # --mode train composes since the tiling lift (ROADMAP gap b); the
+    # ambiguous --mode both combination is what's rejected now
+    with pytest.raises(ValueError, match="ambiguous"):
+        run_dse("tt-lm-100m", smoke=True, mode="both", tune="cache")
     with pytest.raises(ValueError, match="analytic-only"):
         run_dse("tt-lm-100m", smoke=True, objective="edp", tune="cache")
+
+
+def test_run_dse_tune_train_mode_measured_tilings(tmp_path, monkeypatch):
+    """ROADMAP gap (b) closed: train plans may carry measured tilings.
+    The train *search* stays analytic (no calibration), but the emitted
+    plan replays measured forward tilings and cache-served backward
+    tilings."""
+    import repro.tune.measure as tmeasure
+    from repro.dse_cli import run_dse_plan
+
+    monkeypatch.setattr(tmeasure, "measure_gemm", _fake_gemm)
+    monkeypatch.setattr(tmeasure, "measure_streaming", _fake_streaming)
+    cache = str(tmp_path / "cache.json")
+    report, plan = run_dse_plan("tt-lm-100m", smoke=True, top_k=2,
+                                tokens=32, mode="train", tune="cache",
+                                tune_cache=cache)
+    t = report["tune"]
+    assert t["mode"] == "cache"
+    assert t["calibration"] is None          # train search is analytic
+    assert t["n_calibration_shapes"] == 0
+    assert "analytic" in t["note"]
+    assert t["n_measured"] > 0
+    assert plan.tilings == "measured"
+    assert any(lp.backward for lp in plan.layers)  # it is a train plan
 
 
 def test_run_dse_tune_composes_with_hw_search(tmp_path, monkeypatch):
