@@ -1,0 +1,171 @@
+"""BENCH_shard — shard_map-routed planned execution vs the jnp fallback.
+
+Before the sharded executor landed, any mesh with an axis > 1 demoted
+every planned Pallas layer to the sharding-preserving jnp executor —
+multi-device hosts paid the gate exactly where throughput matters.  This
+benchmark tracks the payoff of lifting it: wall-clock tokens/s of one
+planned TT projection at the serve prefill shape, at 1/2/4/8 forced host
+devices, against the jnp-fallback baseline at the same total token count.
+
+Per device count ``n`` a subprocess (device count is fixed at jax init,
+so the parent cannot re-width itself) measures two deployments of the
+*same* plan layer:
+
+- **planned**  — the plan's ``streaming_tt`` kernel; at ``n > 1`` routed
+  through ``jax.shard_map`` over a ``("data",)=n`` mesh, each shard
+  running the kernel at its per-shard ``(tokens/n, d_in)`` block
+  (``repro.plan.sharded``); at ``n = 1`` the single-device planned path;
+- **jnp_fallback** — the same planned contraction steps through the
+  reference jnp executor — what the old single-device gate forced on
+  every mesh width.
+
+Each width's plan is searched at its per-shard problem size
+(``repro.dse --shards n``), so the kernel tilings are the ones the
+deployment flow would actually install.  On CPU hosts the kernels run in
+interpret mode — absolute numbers are host-speed, but the
+planned-vs-fallback *ratio* per width is the quantity the gate decision
+hinges on.
+
+  PYTHONPATH=src python -m benchmarks.run --only bench_shard
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+from repro.dse_cli import run_dse_plan
+
+from .common import emit
+
+ARCH = "tt-lm-100m"
+LAYER = "mlp.wu"          # 768 -> 3072, the widest streamed projection
+TOKENS = 512              # serve prefill shape: one batch-1, seq-512 prompt
+DEVICE_COUNTS = (1, 2, 4, 8)
+REPEATS = 5
+
+_HARNESS = r"""
+import dataclasses, json, statistics, sys, time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+n = int(sys.argv[1])
+plan_path = sys.argv[2]
+layer = sys.argv[3]
+tokens = int(sys.argv[4])
+repeats = int(sys.argv[5])
+assert jax.device_count() == n, (jax.device_count(), n)
+
+from jax.sharding import Mesh
+from repro.configs import get_config
+from repro.dse_cli import _block_specs
+from repro.nn.linear import linear_init
+from repro.plan import load_plan
+from repro.plan.executor import planned_tt_linear
+from repro.plan.sharded import shard_decision, sharded_tt_linear
+from repro.sharding import ShardingRules
+
+cfg = get_config(ARCH_PLACEHOLDER)
+spec = next(s for s, _, _ in _block_specs(cfg) if s.name == layer)
+lp = load_plan(plan_path).layer(layer)
+assert lp.backend == "streaming_tt", lp.backend
+
+n_cores = len(spec.out_modes) + len(spec.in_modes)
+params = linear_init(jax.random.PRNGKey(0), spec)
+cores = [params[f"core{k}"] for k in range(n_cores)]
+x = jax.random.normal(jax.random.PRNGKey(1), (tokens, spec.d_in), jnp.float32)
+
+if n > 1:
+    mesh = Mesh(np.array(jax.devices()).reshape(n), ("data",))
+    rules = ShardingRules(axis_sizes={"data": n}, mesh=mesh)
+    decision = shard_decision(rules, tokens, spec.in_modes)
+    assert decision is not None and decision.n_shards == n, decision
+
+    def planned(xs):
+        return sharded_tt_linear(lp, xs, cores, spec.in_modes,
+                                 spec.out_modes, spec.tt_ranks,
+                                 rules=rules, decision=decision)
+else:
+    def planned(xs):
+        return planned_tt_linear(lp, xs, cores, spec.in_modes,
+                                 spec.out_modes, spec.tt_ranks)
+
+ref_lp = dataclasses.replace(lp, backend="jnp")
+
+def fallback(xs):
+    return planned_tt_linear(ref_lp, xs, cores, spec.in_modes,
+                             spec.out_modes, spec.tt_ranks)
+
+planned_j = jax.jit(planned)
+fallback_j = jax.jit(fallback)
+
+# numerics sanity: same function, different contraction arithmetic
+np.testing.assert_allclose(np.asarray(planned_j(x)),
+                           np.asarray(fallback_j(x)), rtol=2e-4, atol=2e-5)
+
+def bench(fn):
+    fn(x).block_until_ready()  # compile outside the timed region
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return tokens / statistics.median(ts)
+
+print(json.dumps({"tok_s_planned": bench(planned_j),
+                  "tok_s_jnp_fallback": bench(fallback_j)}))
+"""
+
+
+def _measure(n: int, plan_path: str) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), os.pardir, "src")
+        + os.pathsep + env.get("PYTHONPATH", ""))
+    harness = _HARNESS.replace("ARCH_PLACEHOLDER", repr(ARCH))
+    proc = subprocess.run(
+        [sys.executable, "-c", harness, str(n), plan_path, LAYER,
+         str(TOKENS), str(REPEATS)],
+        capture_output=True, text=True, timeout=1200, env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"shard harness failed at n={n}\n{proc.stderr[-4000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def run() -> list[dict]:
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        for n in DEVICE_COUNTS:
+            _, plan = run_dse_plan(ARCH, tokens=TOKENS,
+                                   plan_backend="streaming_tt",
+                                   shards=(n if n > 1 else None))
+            lp = plan.layer(LAYER)
+            plan_path = os.path.join(tmp, f"plan_s{n}.json")
+            plan.save(plan_path)
+            m = _measure(n, plan_path)
+            rows.append({
+                "arch": ARCH,
+                "layer": LAYER,
+                "tokens": TOKENS,
+                "devices": n,
+                "tokens_per_shard": TOKENS // n,
+                "block_tokens": lp.tiling.block_tokens,
+                "tok_s_planned": m["tok_s_planned"],
+                "tok_s_jnp_fallback": m["tok_s_jnp_fallback"],
+                "planned_vs_fallback":
+                    m["tok_s_planned"] / m["tok_s_jnp_fallback"],
+            })
+    emit("BENCH_shard", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -18,6 +18,7 @@ from . import (
     bench_dse,
     bench_dse_overhead,
     bench_search,
+    bench_shard_scaling,
     bench_plan_exec,
     bench_serve_wallclock,
     fig3_paths,
@@ -45,6 +46,7 @@ SUITES = {
     "plan_exec": bench_plan_exec.run,
     "bench_dse": bench_dse.run,
     "bench_search": bench_search.run,
+    "bench_shard": bench_shard_scaling.run,
     "bench_serve": bench_serve_wallclock.run,
 }
 

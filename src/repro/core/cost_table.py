@@ -300,6 +300,21 @@ def build_cost_tables_hw(
     )
 
 
+def shard_streamed_tokens(tokens: int, n_shards: int) -> int:
+    """Per-device token count for an ``n_shards`` data-parallel mesh.
+
+    The shard_map executor (``repro.plan.sharded``) streams
+    ``tokens / n_shards`` rows per device, so cost tables and tilings
+    must be evaluated at this count for the searched mapping to match
+    what executes.  Non-divisible counts floor (the executor would fall
+    back to the jnp path for those, but the search still wants the
+    closest per-shard problem); never below 1.
+    """
+    if n_shards <= 1:
+        return tokens
+    return max(1, tokens // n_shards)
+
+
 def build_cost_tables(
     layer_paths: Sequence[Sequence[CandidatePath]],
     hw: HardwareConfig,

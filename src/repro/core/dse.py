@@ -170,6 +170,9 @@ def combine_phase_tables(
     *,
     w_prefill: float = 1.0,
     w_decode: float = 1.0,
+    calibration=None,
+    prefill_paths: Sequence[Sequence[CandidatePath]] | None = None,
+    decode_paths: Sequence[Sequence[CandidatePath]] | None = None,
 ) -> dict[tuple[int, int, Partitioning, Dataflow], float]:
     """Decode-weighted combined serving cost: ``w_p*T_pre + w_d*T_dec``.
 
@@ -179,12 +182,27 @@ def combine_phase_tables(
     serving weight is typically ``w_decode = gen_tokens / n_slots``: one
     admission's prefill amortized against its share of fixed-width
     decode steps.
+
+    ``calibration`` applies the autotuner's measured correction
+    (:func:`apply_calibration`) to *each phase table separately, at that
+    phase's own GEMM shapes*, before combining: a shape-aware
+    ``CostCorrection`` resolves the prefill cells against
+    ``prefill_paths`` and the decode cells against ``decode_paths``
+    (decode GEMMs are much skinnier, so one shared scale would mislead
+    exactly where the phases disagree).  The calibrated combined table
+    should then feed ``global_search(..., calibration=None)`` — the
+    correction is already inside.
     """
     if prefill_table.keys() != decode_table.keys():
         raise ValueError(
             "phase tables index different (layer, path, partitioning, "
             "dataflow) keys; build the decode table over "
             "replay_paths(layer_paths, decode_networks)")
+    if calibration is not None:
+        prefill_table = apply_calibration(prefill_table, calibration,
+                                          layer_paths=prefill_paths)
+        decode_table = apply_calibration(decode_table, calibration,
+                                         layer_paths=decode_paths)
     return {
         k: w_prefill * prefill_table[k] + w_decode * decode_table[k]
         for k in prefill_table

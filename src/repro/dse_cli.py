@@ -228,6 +228,7 @@ def run_dse(
     search_seed: int = 0,
     rank_search: str = "off",
     accuracy_budget: Optional[float] = None,
+    shards: Optional[int] = None,
 ) -> dict:
     """Run Algorithm 1 end-to-end; returns the JSON-serializable report.
 
@@ -265,6 +266,11 @@ def run_dse(
     with the (latency, accuracy-proxy) frontier; ``accuracy_budget``
     caps the chosen candidate's reconstruction-error proxy (default:
     no worse than the frozen decomposition).
+
+    ``shards=N`` searches at per-device shard shapes (``tokens / N``)
+    so the emitted tilings match what the shard_map executor streams per
+    device on an N-way data-parallel mesh; defaults to an installed
+    ``ShardingRules`` mesh, else unsharded.
     """
     if mode == "both":
         _check_train_compatible(objective, engine)  # fail before any search
@@ -273,16 +279,17 @@ def run_dse(
         infer, _, _, _, _, _ = _run_dse(
             arch, hw, top_k, objective, tokens, smoke, engine, "infer",
             hw_search, hw_budget, search=search, search_budget=search_budget,
-            search_seed=search_seed)
+            search_seed=search_seed, shards=shards)
         train, _, _, _, _, _ = _run_dse(
             arch, hw, top_k, objective, tokens, smoke, engine, "train",
             hw_search, hw_budget, search=search, search_budget=search_budget,
-            search_seed=search_seed)
+            search_seed=search_seed, shards=shards)
         return _both_report(infer, train)
     report, _, _, _, tuner, _ = _run_dse(
         arch, hw, top_k, objective, tokens, smoke, engine, mode, hw_search,
         hw_budget, tune, tune_cache, serve_gen, serve_slots, decode_tokens,
-        search, search_budget, search_seed, rank_search, accuracy_budget)
+        search, search_budget, search_seed, rank_search, accuracy_budget,
+        shards)
     _save_tuner(tuner)
     return report
 
@@ -353,6 +360,7 @@ def run_dse_plan(
     search_seed: int = 0,
     rank_search: str = "off",
     accuracy_budget: Optional[float] = None,
+    shards: Optional[int] = None,
 ):
     """Run the DSE and compile its result into an ExecutionPlan.
 
@@ -395,13 +403,14 @@ def run_dse_plan(
         infer_report, _, _, _, _, _ = _run_dse(
             arch, hw, top_k, objective, tokens, smoke, engine, "infer",
             hw_search, hw_budget, search=search, search_budget=search_budget,
-            search_seed=search_seed)
+            search_seed=search_seed, shards=shards)
     plan_mode = "train" if mode in ("train", "both") else "infer"
     report, named, res, plan_hw, tuner, calibration = _run_dse(
         arch, hw, top_k, objective, tokens, smoke, engine, plan_mode,
         hw_search, hw_budget, tune, tune_cache,
         serve_gen, serve_slots, decode_tokens,
-        search, search_budget, search_seed, rank_search, accuracy_budget)
+        search, search_budget, search_seed, rank_search, accuracy_budget,
+        shards)
     factorizations = None
     rank_report = report.get("rank_search")
     if rank_report is not None and rank_report.get("plan_embeddable"):
@@ -415,6 +424,15 @@ def run_dse_plan(
                 accuracy_proxy=float(f["accuracy_proxy"]))
             for f in rank_report["chosen"]["families"]
         }
+    plan_sharding = None
+    shard_rep = report.get("sharding")
+    if shard_rep is not None:
+        from repro.plan import PlanSharding
+
+        plan_sharding = PlanSharding(
+            n_shards=int(shard_rep["n_shards"]),
+            axes=tuple((str(a), int(s)) for a, s in shard_rep["axes"]),
+            tokens_per_shard=int(shard_rep["tokens_per_shard"]))
     plan = compile_plan(
         named, res, plan_hw,
         arch=arch,
@@ -426,9 +444,10 @@ def run_dse_plan(
         tuner=tuner,
         phase=phase,
         factorizations=factorizations,
+        sharding=plan_sharding,
     )
     if tuner is not None:
-        if calibration is not None:
+        if calibration is not None and report["objective"] == "latency":
             # the argmin ran over the calibrated table, so each choice's
             # latency landed in measured-rescaled units; divide the scale
             # back out so the plan's per-layer provenance stays in the
@@ -438,6 +457,9 @@ def run_dse_plan(
             # dataflow), so each family's scale comes from its own
             # choice's dominant GEMM.  Train-mode searches run analytic
             # (calibration is None) — their latencies need no unscaling.
+            # Throughput objectives keep calibrated units: the combined
+            # value mixes two phases' scales, so no single factor
+            # recovers analytic seconds.
             from repro.plan.compiler import base_name
             from repro.tune.variants import dominant_gemm
 
@@ -521,9 +543,12 @@ def _check_tune_compatible(tune: str, mode: str, objective: str,
     under an architecture co-search (ROADMAP gap c, closed).  Train mode
     is allowed since the tiling lift (ROADMAP gap b): the train *search*
     stays analytic, but train-mode plans serve measured forward tilings
-    and any backward-op tilings already in the cache.  Composing the
-    calibration with the fwd+bwd decomposition or the EDP objective are
-    still open items (ROADMAP.md)."""
+    and any backward-op tilings already in the cache.  The throughput
+    objective is calibrated per phase (ROADMAP serving follow-on (a),
+    closed): the correction rescales the prefill and decode tables at
+    their own GEMM shapes inside ``combine_phase_tables``.  Composing
+    the calibration with the fwd+bwd decomposition or the EDP objective
+    are still open items (ROADMAP.md)."""
     if tune == "off":
         return
     if tune not in TUNE_MODES:
@@ -533,10 +558,10 @@ def _check_tune_compatible(tune: str, mode: str, objective: str,
             "--tune with --mode both is ambiguous (the infer leg searches "
             "a calibrated table, the train leg an analytic one); run the "
             "modes separately")
-    if objective != "latency":
+    if objective not in ("latency", "throughput"):
         raise ValueError(
-            "--tune calibrates the latency objective; --objective "
-            f"{objective} is analytic-only for now")
+            "--tune calibrates the latency and throughput objectives; "
+            f"--objective {objective} is analytic-only for now")
 
 
 def _check_rank_compatible(rank_search: str, mode: str, objective: str,
@@ -570,12 +595,42 @@ def _check_rank_compatible(rank_search: str, mode: str, objective: str,
             "need per-candidate GEMM coverage (open item)")
 
 
-def _make_tuner(tune: str, tune_cache: Optional[str]):
+def _make_tuner(tune: str, tune_cache: Optional[str], shards: int = 1):
     """Build the Autotuner over the persistent cache (lazy import)."""
     from repro.tune import Autotuner, DEFAULT_CACHE_PATH, TuningCache
 
     path = tune_cache or DEFAULT_CACHE_PATH
-    return Autotuner(TuningCache.load_or_empty(path), tune, cache_path=path)
+    return Autotuner(TuningCache.load_or_empty(path), tune, cache_path=path,
+                     shards=shards)
+
+
+def _shard_context(shards: Optional[int]) -> Optional[dict]:
+    """Resolve the per-device shard context for the search, or ``None``.
+
+    An explicit ``--shards N`` wins; otherwise an installed
+    :class:`~repro.sharding.ShardingRules` mesh supplies its token axes
+    (library callers running the DSE under ``use_rules``).  When a
+    context is active the searched problems, cost tables, tilings, and
+    tuning sweeps are all built at ``tokens / n_shards`` — the per-device
+    block the shard_map executor streams (``repro.plan.sharded``).
+    """
+    if shards is not None:
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if shards == 1:
+            return None
+        return {"n_shards": int(shards), "axes": [["data", int(shards)]]}
+    from repro.sharding import get_rules
+
+    rules = get_rules()
+    if rules is None or rules.mesh is None:
+        return None
+    axes = [[a, int(rules.axis_sizes[a])] for a in rules.resolve("tokens")
+            if rules.axis_sizes.get(a, 1) > 1]
+    n = math.prod(s for _, s in axes)
+    if n <= 1:
+        return None
+    return {"n_shards": int(n), "axes": axes}
 
 
 def _save_tuner(tuner) -> None:
@@ -604,9 +659,16 @@ def _run_dse(
     search_seed: int = 0,
     rank_search: str = "off",
     accuracy_budget: Optional[float] = None,
+    shards: Optional[int] = None,
 ):
     """Shared pipeline; returns (report, named_layers, DSEResult, hw_cfg,
     tuner, calibration).
+
+    ``shards`` activates the per-device shard context
+    (:func:`_shard_context`): every problem network — and therefore
+    every cost table, tiling, and tuning sweep — is built at the
+    per-shard token count the shard_map executor streams, and the report
+    gains a ``sharding`` section for plan provenance.
 
     The returned hardware config is the one the plan should compile for:
     the co-searched winner under ``hw_search``, else the fixed target.
@@ -673,8 +735,14 @@ def _run_dse(
     if search_budget is not None and search != "guided":
         raise ValueError("search_budget requires search='guided'")
     _check_tune_compatible(tune, mode, objective, hw_search)
+    shard_ctx = _shard_context(shards)
     if rank_search != "off":
         _check_rank_compatible(rank_search, mode, objective, engine, tune)
+        if shard_ctx is not None:
+            raise ValueError(
+                "--rank-search re-derives networks per decomposition "
+                "candidate; composing it with the --shards context is not "
+                "supported yet")
         return _run_rank_dse(
             arch, hw, top_k, tokens, smoke, engine, hw_search, hw_budget,
             search, search_budget, search_seed, accuracy_budget)
@@ -682,6 +750,16 @@ def _run_dse(
         raise ValueError("accuracy_budget requires rank_search='budget'")
 
     named, tokens = dse_problems(arch, tokens, smoke)
+    if shard_ctx is not None:
+        # per-device problems: the searched tilings/tables must match the
+        # (tokens / n_shards) block each device actually streams
+        from repro.core.cost_table import shard_streamed_tokens
+
+        global_tokens = tokens
+        tokens = shard_streamed_tokens(tokens, shard_ctx["n_shards"])
+        named, _ = dse_problems(arch, tokens, smoke)
+        shard_ctx = {**shard_ctx, "tokens_per_shard": tokens,
+                     "global_tokens": global_tokens}
 
     # stage 1 — top-K path search, memoised over repeated layers
     t0 = time.perf_counter()
@@ -716,7 +794,8 @@ def _run_dse(
         # whatever the cache already holds (analytic fallback on miss) —
         # but the train *search* stays analytic: composing the measured
         # calibration with the fwd+bwd+update decomposition is open.
-        tuner = _make_tuner(tune, tune_cache)
+        tuner = _make_tuner(tune, tune_cache,
+                            shards=(shard_ctx or {}).get("n_shards", 1))
         tune_report = {
             "mode": tune,
             "cache": tuner.cache_path,
@@ -738,7 +817,8 @@ def _run_dse(
             measured_calibration,
         )
 
-        tuner = _make_tuner(tune, tune_cache)
+        tuner = _make_tuner(tune, tune_cache,
+                            shards=(shard_ctx or {}).get("n_shards", 1))
         t0 = time.perf_counter()
         shapes = gemm_work_items(layer_paths,
                                  max_shapes=TUNE_CALIBRATION_SHAPES)
@@ -838,6 +918,11 @@ def _run_dse(
         obj_table = seconds_table
     decode_seconds = None
     dec_tokens = decode_tokens if decode_tokens is not None else serve_slots
+    if shard_ctx is not None:
+        from repro.core.cost_table import shard_streamed_tokens
+
+        dec_tokens = shard_streamed_tokens(dec_tokens,
+                                           shard_ctx["n_shards"])
     if hw_search == "off" and mode != "train" and engine != "scalar":
         tables = build_cost_tables(layer_paths, hw_cfg, all_parts)
         seconds_table = tables.seconds
@@ -856,9 +941,15 @@ def _run_dse(
             decode_tables = build_cost_tables(decode_paths, hw_cfg, all_parts)
             decode_seconds = decode_tables.seconds
             table_build_s += decode_tables.build_seconds
+            # measured calibration applies per phase, at each phase's own
+            # GEMM shapes (ROADMAP serving follow-on (a)); the combined
+            # table is then final — stage 3 must not rescale it again
             obj_table = combine_phase_tables(
                 seconds_table, decode_seconds,
-                w_decode=serve_gen / serve_slots)
+                w_decode=serve_gen / serve_slots,
+                calibration=calibration,
+                prefill_paths=layer_paths,
+                decode_paths=decode_paths)
         else:
             obj_table = seconds_table
 
@@ -882,7 +973,9 @@ def _run_dse(
         else:
             res = global_search(
                 layer_paths, hw_cfg, table=obj_table,
-                calibration=calibration,
+                # throughput tables arrive pre-calibrated per phase
+                calibration=(None if objective == "throughput"
+                             else calibration),
                 objective="throughput" if objective == "throughput"
                 else "latency")
         argmin_s = time.perf_counter() - t0
@@ -943,6 +1036,7 @@ def _run_dse(
             "exhaustive_evals": n_space * _table_cells(layer_paths,
                                                       all_parts),
         },
+        "sharding": shard_ctx,
         "n_layers": len(layers),
         "timings": {
             "path_search_s": path_search_s,
@@ -974,6 +1068,10 @@ def _run_dse(
             "gen_tokens": serve_gen,
             "n_slots": serve_slots,
             "decode_weight": serve_gen / serve_slots,
+            # True when the combined table was measured-calibrated per
+            # phase (--tune with --objective throughput); the analytic
+            # phase split below stays in analytic seconds either way
+            "calibrated": calibration is not None,
             "total_prefill_s": sum(seconds_table[k] for k in keys),
             "total_decode_step_s": sum(decode_seconds[k] for k in keys),
             "total_combined_s": res.total_latency_s,
@@ -1232,6 +1330,12 @@ def _build_parser() -> argparse.ArgumentParser:
     p.add_argument("--tokens", type=int, default=None,
                    help="streamed tokens per projection (default 1024; "
                         "vision archs: im2col batch, default 1)")
+    p.add_argument("--shards", type=int, default=None, metavar="N",
+                   help="search per-shard problems for an N-way token-"
+                        "parallel mesh: each projection is costed at "
+                        "--tokens/N streamed tokens and emitted plans carry "
+                        "sharding provenance (default: installed sharding "
+                        "rules, else 1)")
     p.add_argument("--smoke", action="store_true",
                    help="use the config's reduced SMOKE variant")
     p.add_argument("--engine", default="vectorized",
@@ -1333,7 +1437,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 engine=args.engine, plan_backend=args.plan_backend,
                 mode="infer", tune=args.tune, tune_cache=args.tune_cache,
                 search=args.search, search_budget=args.search_budget,
-                search_seed=args.search_seed,
+                search_seed=args.search_seed, shards=args.shards,
             )
             dec_tokens = (args.decode_tokens if args.decode_tokens is not None
                           else args.serve_slots)
@@ -1377,6 +1481,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 search_seed=args.search_seed,
                 rank_search=args.rank_search,
                 accuracy_budget=args.accuracy_budget,
+                shards=args.shards,
             )
             plan.save(args.emit_plan)
             backends = sorted({lp.backend for lp in plan.layers})
@@ -1408,6 +1513,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 search_seed=args.search_seed,
                 rank_search=args.rank_search,
                 accuracy_budget=args.accuracy_budget,
+                shards=args.shards,
             )
     except (KeyError, ValueError) as e:
         msg = e.args[0] if e.args else e

@@ -41,6 +41,7 @@ from repro.serve import (
 from repro.sharding import use_rules
 
 EXIT_UNPLANNED = 3   # --strict-plan: plan given, zero planned executions
+EXIT_DEMOTED = 4     # --strict-plan: planned Pallas layers fell back to jnp
 
 
 def _load_and_describe(path: str, label: str):
@@ -101,7 +102,9 @@ def main(argv=None) -> int:
     ap.add_argument("--strict-plan", action="store_true",
                     help="exit non-zero if a plan was given but the run "
                          "executed no planned projection (entirely "
-                         "UNPLANNED run)")
+                         "UNPLANNED run), or if any layer planned for a "
+                         "Pallas backend silently fell back to the jnp "
+                         "executor (DEMOTED run)")
     args = ap.parse_args(argv)
 
     if args.plan and (args.plan_prefill or args.plan_decode):
@@ -205,6 +208,35 @@ def main(argv=None) -> int:
         if tilings:
             print("kernel tilings (block_m,k,n,tokens): "
                   + " ".join(str(t) for t in tilings))
+        meshes = sorted({r.get("mesh", "") for r in log} - {""})
+        if meshes:
+            shapes = sorted({tuple(r["shard_shape"]) for r in log
+                             if r.get("shard_shape")})
+            print(f"sharded execution: mesh {' '.join(meshes)}, "
+                  f"per-shard (tokens, d_in) "
+                  + " ".join(str(s) for s in shapes))
+        # a layer planned for a Pallas backend that recorded backend
+        # "jnp" was demoted by the dispatcher (e.g. a mesh the problem
+        # could not shard over) — surface it; --strict-plan makes it fatal
+        backends_by_stream = {
+            s: ({lp.name: lp.backend for lp in p.layers}
+                if p is not None else {})
+            for s, p in (("prefill", prefill_plan), ("decode", decode_plan))
+        }
+        demoted = [
+            r for r in log
+            if r["backend"] == "jnp"
+            and backends_by_stream.get(
+                r["stream"], {}).get(r["name"], "jnp") != "jnp"
+        ]
+        if demoted:
+            names = sorted({r["name"] for r in demoted})
+            print(f"WARNING: {len(demoted)} planned-Pallas executions were "
+                  f"DEMOTED to the jnp executor ({len(names)} layers: "
+                  f"{names[:4]}{'...' if len(names) > 4 else ''})",
+                  file=sys.stderr)
+            if args.strict_plan:
+                return EXIT_DEMOTED
         if not log:
             print(
                 "WARNING: a plan was given but the run executed no planned "

@@ -129,6 +129,10 @@ def main() -> None:
                           if r.get("phase") == "bwd"})
             print(f"planned execution under grad: fwd backends {fwd}, "
                   f"bwd backends {bwd}")
+            meshes = sorted({r.get("mesh", "") for r in log} - {""})
+            if meshes:
+                print(f"sharded planned execution: mesh {' '.join(meshes)} "
+                      f"(per-shard kernels via shard_map)")
         print(f"finished at step {done}; stragglers flagged: {monitor.flagged}")
 
 

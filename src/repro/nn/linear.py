@@ -34,11 +34,12 @@ _EDGE_AXES = {"b": "tokens", "b0": "batch", "b1": "seq"}
 def _single_device() -> bool:
     """True when no multi-device sharding rules are installed.
 
-    The Pallas plan backends flatten (B, S) to tokens and apply no
-    sharding constraints; on a >1-device mesh that would force exactly
-    the relayout the split-batch-edge path exists to avoid, so planned
-    kernel routing is restricted to single-device execution — the plan's
-    contraction path still applies everywhere via the jnp executor.
+    Planned kernels run locally in this case.  On a >1-device mesh the
+    dispatcher instead routes through ``repro.plan.sharded`` — explicit
+    ``shard_map`` over the rules' token axes, per-shard Pallas execution
+    — whenever the mesh can take the problem (a real ``rules.mesh`` and
+    a token count divisible over the DP axes); only when it cannot does
+    the jnp executor fall back with sharding constraints.
     """
     from repro.sharding import get_rules
 
@@ -376,22 +377,43 @@ def linear_apply(
                 jnp.sqrt(jnp.mean(jnp.square(x.astype(jnp.float32))))))
         lp = planned_layer(spec.name) if path_index is None else None
         n_cores = len(spec.out_modes) + len(spec.in_modes)
-        if lp is not None and _single_device() and (
-                lp.backend != "jnp" or _has_pallas_backward(lp)):
+        if lp is not None and (lp.backend != "jnp" or _has_pallas_backward(lp)):
             # planned kernel execution: flatten to (tokens, d_in) and route
-            # through the plan's Pallas backend (see repro.plan.executor)
-            from repro.plan.executor import planned_tt_linear
-
+            # through the plan's Pallas backend — locally on a single
+            # device, via shard_map per-shard kernels on a mesh
+            # (repro.plan.executor / repro.plan.sharded)
             tokens = math.prod(lead) if lead else 1
-            cores = [params[f"core{k}"] for k in range(n_cores)]
-            y2d = planned_tt_linear(
-                lp, x.reshape(tokens, spec.d_in), cores,
-                spec.in_modes, spec.out_modes, spec.tt_ranks,
-            )
-            y = y2d.reshape(lead + (spec.d_out,)).astype(x.dtype)
-            if spec.bias:
-                y = y + params["b"].astype(y.dtype)
-            return y
+            decision = None
+            routed = _single_device()
+            if not routed:
+                from repro.plan.sharded import shard_decision
+                from repro.sharding import get_rules
+
+                rules = get_rules()
+                decision = shard_decision(rules, tokens, spec.in_modes)
+                routed = decision is not None
+            if routed:
+                cores = [params[f"core{k}"] for k in range(n_cores)]
+                x2d = x.reshape(tokens, spec.d_in)
+                if decision is None:
+                    from repro.plan.executor import planned_tt_linear
+
+                    y2d = planned_tt_linear(
+                        lp, x2d, cores,
+                        spec.in_modes, spec.out_modes, spec.tt_ranks,
+                    )
+                else:
+                    from repro.plan.sharded import sharded_tt_linear
+
+                    y2d = sharded_tt_linear(
+                        lp, x2d, cores,
+                        spec.in_modes, spec.out_modes, spec.tt_ranks,
+                        rules=rules, decision=decision,
+                    )
+                y = y2d.reshape(lead + (spec.d_out,)).astype(x.dtype)
+                if spec.bias:
+                    y = y + params["b"].astype(y.dtype)
+                return y
         # keep (B, S) as split batch edges when present: shardings survive
         # without any tokens-flatten relayout (see _constrain_tokens)
         if len(lead) == 2:

@@ -16,6 +16,7 @@ from .schema import (
     ExecutionPlan,
     Factorization,
     LayerPlan,
+    PlanSharding,
     Tiling,
     load_plan,
     migrate_plan_json,
@@ -35,16 +36,20 @@ from .executor import (
     planned_tt_linear,
     record_execution,
     reset_execution_log,
+    shard_execution,
 )
+from .sharded import ShardDecision, shard_decision, sharded_tt_linear
 
 __all__ = [
     "BACKENDS", "PHASES", "PLAN_FORMAT_VERSION", "SUPPORTED_VERSIONS",
     "TILING_MODES",
     "BackwardOp",
-    "ExecutionPlan", "Factorization", "LayerPlan", "Tiling", "load_plan",
-    "migrate_plan_json",
+    "ExecutionPlan", "Factorization", "LayerPlan", "PlanSharding",
+    "Tiling", "load_plan", "migrate_plan_json",
     "base_name", "batch_dim", "check_plan_for_config", "compile_plan",
     "streaming_fits", "validate_plan",
     "as_candidate_path", "execution_log", "execution_stream",
     "planned_tt_linear", "record_execution", "reset_execution_log",
+    "shard_execution",
+    "ShardDecision", "shard_decision", "sharded_tt_linear",
 ]

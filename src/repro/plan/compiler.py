@@ -51,6 +51,7 @@ from .schema import (
     ExecutionPlan,
     Factorization,
     LayerPlan,
+    PlanSharding,
     Tiling,
 )
 
@@ -504,6 +505,7 @@ def compile_plan(
     phase: str = "",
     tuner=None,
     factorizations: Optional[Mapping[str, Factorization]] = None,
+    sharding: Optional[PlanSharding] = None,
 ) -> ExecutionPlan:
     """Compile a DSE result into an installable :class:`ExecutionPlan`.
 
@@ -533,6 +535,12 @@ def compile_plan(
     decomposition (schema v4, from ``repro.rank``): the named layers
     must already have been built *under* that factorization — the
     compiler records it, it does not re-derive networks.
+
+    ``sharding`` stamps the mesh provenance (``repro.dse --shards``):
+    like factorizations, the named layers must already be the per-shard
+    problems — ``tokens`` is then the per-shard token count the tilings
+    derive from, matching what the shard_map executor streams per
+    device.
     """
     if backend != "auto" and backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; have {('auto',) + BACKENDS}")
@@ -608,4 +616,5 @@ def compile_plan(
         hardware=hw,
         tilings=tilings,
         phase=phase,
+        sharding=sharding,
     )

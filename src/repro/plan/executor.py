@@ -64,6 +64,11 @@ _EXEC_LOG: list[dict] = []
 #: scheduler's per-phase plan switching is assertable from the log
 _STREAM: list[str] = []
 
+#: shard-execution stack (``shard_execution``): records traced inside a
+#: shard_map body carry the mesh layout and the per-shard problem shape,
+#: so "the kernel ran at per-shard shapes on this mesh" is assertable
+_SHARD: list[tuple[str, tuple[int, ...]]] = []
+
 
 def reset_execution_log() -> None:
     _EXEC_LOG.clear()
@@ -90,6 +95,24 @@ def execution_stream(name: str) -> Iterator[None]:
         yield
     finally:
         _STREAM.pop()
+
+
+@contextlib.contextmanager
+def shard_execution(mesh: str, shard_shape: tuple[int, ...]) -> Iterator[None]:
+    """Tag records traced inside with their shard_map placement.
+
+    ``mesh`` is a human-readable axis layout (``"data=4"`` or
+    ``"data=4+reduce(model=2)"``); ``shard_shape`` is the per-device
+    ``(tokens, d_in)`` the kernel actually sees.  The sharded dispatcher
+    (:mod:`repro.plan.sharded`) wraps its shard_map call in this context
+    — the body traces within, so per-shard kernel records pick up the
+    fields.  Single-device records carry ``mesh=""``/``shard_shape=None``.
+    """
+    _SHARD.append((str(mesh), tuple(int(d) for d in shard_shape)))
+    try:
+        yield
+    finally:
+        _SHARD.pop()
 
 
 def record_execution(
@@ -119,6 +142,8 @@ def record_execution(
         "tokens": tokens,
         "phase": phase,
         "stream": _STREAM[-1] if _STREAM else "",
+        "mesh": _SHARD[-1][0] if _SHARD else "",
+        "shard_shape": list(_SHARD[-1][1]) if _SHARD else None,
         "tiling": (lp.tiling if tiling is None else tiling).to_json(),
     }
     if wrt is not None:

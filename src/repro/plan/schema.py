@@ -314,6 +314,49 @@ class LayerPlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class PlanSharding:
+    """Sharding provenance: the mesh context the plan was searched for.
+
+    Stamped by ``repro.dse --shards N`` (or an installed
+    :class:`~repro.sharding.ShardingRules` mesh at search time): problem
+    networks, cost tables, and tilings were all evaluated at
+    ``tokens_per_shard`` — the per-device token block the shard_map
+    executor (:mod:`repro.plan.sharded`) actually streams — instead of
+    the global batch.  ``axes`` records the (mesh axis, size) pairs the
+    token dim shards over; purely descriptive, execution re-derives the
+    mapping from the rules installed at run time.  Optional wire field
+    (absent = searched unsharded), so existing v4 readers stay
+    compatible — no schema bump.
+    """
+
+    n_shards: int
+    axes: tuple[tuple[str, int], ...] = ()
+    tokens_per_shard: int = 0
+
+    def __post_init__(self) -> None:
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if self.tokens_per_shard < 0:
+            raise ValueError(
+                f"tokens_per_shard must be >= 0, got {self.tokens_per_shard}")
+
+    def to_json(self) -> dict:
+        return {
+            "n_shards": self.n_shards,
+            "axes": [[a, int(s)] for a, s in self.axes],
+            "tokens_per_shard": self.tokens_per_shard,
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "PlanSharding":
+        return cls(
+            n_shards=int(d["n_shards"]),
+            axes=tuple((str(a), int(s)) for a, s in d.get("axes", ())),
+            tokens_per_shard=int(d.get("tokens_per_shard", 0)),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """The installable compilation of one DSE run."""
 
@@ -336,6 +379,9 @@ class ExecutionPlan:
     #: serving-phase hint (see :data:`PHASES`) — ``--emit-plan-pair``
     #: stamps the two halves so drivers can refuse a swapped pair
     phase: str = ""
+    #: sharding provenance (``None`` = searched unsharded); optional on
+    #: the wire — absent in plans emitted before the shard axis existed
+    sharding: Optional[PlanSharding] = None
     version: int = PLAN_FORMAT_VERSION
 
     def __post_init__(self) -> None:
@@ -388,6 +434,8 @@ class ExecutionPlan:
             "tilings": self.tilings,
             "tokens": self.tokens,
             "total_latency_s": self.total_latency_s,
+            "sharding": (self.sharding.to_json()
+                         if self.sharding is not None else None),
             "layers": [lp.to_json() for lp in self.layers],
         }
 
@@ -415,6 +463,8 @@ class ExecutionPlan:
                       if hardware is not None else None),
             tilings=str(d.get("tilings", "heuristic")),
             phase=str(d.get("phase", "")),
+            sharding=(PlanSharding.from_json(d["sharding"])
+                      if d.get("sharding") is not None else None),
             version=PLAN_FORMAT_VERSION,
         )
 

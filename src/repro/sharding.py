@@ -32,6 +32,11 @@ class ShardingRules:
     model_axis: Optional[str] = "model"
     seq_axis: Optional[str] = None        # set to model axis for SP
     mesh: Optional[jax.sharding.Mesh] = None
+    #: opt-in row-parallel TT execution: split the leading input mode (and
+    #: its core) over the model axis and psum the partial outputs inside
+    #: the shard_map body (see repro.plan.sharded).  Changes float
+    #: summation order — outputs are equivalent, not bit-identical.
+    tt_model_reduce: bool = False
 
     def resolve(self, logical: Optional[str]) -> tuple[str, ...]:
         if logical is None:
@@ -48,6 +53,25 @@ class ShardingRules:
             seq = (self.seq_axis,) if self.seq_axis else ()
             return self.batch_axes + tuple(a for a in seq if a not in self.batch_axes)
         raise ValueError(f"unknown logical axis {logical!r}")
+
+    def token_shard_axes(self, tokens: int) -> tuple[str, ...]:
+        """Mesh axes a flattened ``tokens`` dim can shard over, or ``()``.
+
+        The resolved "tokens" axes, kept only when every axis has size > 1
+        and ``tokens`` divides their product (shard_map needs exact
+        per-shard blocks; the GSPMD constraint path merely replicates on
+        mismatch).
+        """
+        axes = tuple(a for a in self.resolve("tokens")
+                     if self.axis_sizes.get(a, 1) > 1)
+        prod = math.prod(self.axis_sizes[a] for a in axes)
+        if not axes or prod <= 1 or tokens % prod != 0:
+            return ()
+        return axes
+
+    def n_token_shards(self, tokens: int) -> int:
+        return math.prod(
+            self.axis_sizes[a] for a in self.token_shard_axes(tokens)) or 1
 
     def partition_spec(self, shape: Sequence[int], logical_axes: Sequence) -> P:
         used: set[str] = set()

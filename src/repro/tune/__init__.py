@@ -35,6 +35,7 @@ from .cache import (
     TuningCache,
     TuningEntry,
     entry_fingerprint,
+    entry_shards,
     kernel_fingerprint,
     merge_caches,
     parse_variant,
@@ -68,8 +69,8 @@ __all__ = [
     "TUNE_MODES", "Autotuner", "analytic_gemm_seconds", "gemm_work_items",
     "heuristic_blocks", "measured_calibration",
     "CACHE_FORMAT", "CACHE_VERSION", "DEFAULT_CACHE_PATH", "KERNEL_MODULES",
-    "TuningCache", "TuningEntry", "entry_fingerprint", "kernel_fingerprint",
-    "merge_caches", "parse_variant", "variant_key",
+    "TuningCache", "TuningEntry", "entry_fingerprint", "entry_shards",
+    "kernel_fingerprint", "merge_caches", "parse_variant", "variant_key",
     "MIN_BUCKET_SAMPLES", "SHAPE_BUCKET_LOG2_WIDTH", "CostCorrection",
     "fit_cost_correction", "shape_bucket",
     "default_interpret", "device_kind", "measure_callable", "measure_gemm",

@@ -74,9 +74,12 @@ class Autotuner:
         measure_gemm_fn=None,
         measure_streaming_fn=None,
         kernel_fp: Optional[str] = None,
+        shards: int = 1,
     ) -> None:
         if mode not in TUNE_MODES:
             raise ValueError(f"unknown tune mode {mode!r}; have {TUNE_MODES}")
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
         self.cache = cache if cache is not None else TuningCache()
         self.mode = mode
         self.cache_path = cache_path
@@ -88,6 +91,10 @@ class Autotuner:
         # hash, so entries measured through edited kernels stop matching
         self.kernel_fp = (kernel_fp if kernel_fp is not None
                           else kernel_fingerprint())
+        # sharded search measures per-shard problems whose shapes depend
+        # on the mesh width — a 4-shard entry must never answer a
+        # single-device lookup, so the shard count is part of every key
+        self.shards = int(shards)
         self.warmup = warmup
         self.repeats = repeats
         # injection points for tests (no real kernels, no real clocks)
@@ -108,7 +115,7 @@ class Autotuner:
     # -- keys --------------------------------------------------------------
     def _suffix(self) -> str:
         interp = "interp" if self.interpret else "native"
-        return f"{self.device_kind}:{interp}:k{self.kernel_fp}"
+        return f"{self.device_kind}:{interp}:s{self.shards}:k{self.kernel_fp}"
 
     def gemm_key(self, M: int, K: int, N: int, dataflow: str) -> str:
         return f"gemm:{M}x{K}x{N}:{dataflow}:{self._suffix()}"

@@ -21,6 +21,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import re
 from typing import Mapping, Optional, Sequence
 
 CACHE_FORMAT = "repro.tuning_cache"
@@ -216,11 +217,29 @@ def entry_fingerprint(key: str) -> Optional[str]:
     return tail
 
 
+_SHARD_SEGMENT = re.compile(r":s(\d+):k[0-9a-f]+$")
+
+
+def entry_shards(key: str) -> Optional[int]:
+    """The shard count embedded in a cache key, or None.
+
+    Keys carry an ``:s<n>`` segment since the sharded-search PR: a
+    measurement of a per-shard problem (tokens split across an n-way
+    mesh) must never answer a lookup for a different mesh width, because
+    the per-shard shapes differ.  Pre-shard keys carry no segment and
+    parse as None — the merger treats them as shard-mismatched when a
+    shard filter is active.
+    """
+    m = _SHARD_SEGMENT.search(key)
+    return int(m.group(1)) if m else None
+
+
 def merge_caches(
     caches: Sequence["TuningCache"],
     *,
     fingerprint: Optional[str] = None,
-) -> tuple["TuningCache", int]:
+    shards: Optional[int] = None,
+) -> tuple["TuningCache", int, int]:
     """Union tuning caches from several hosts into one (ROADMAP gap d).
 
     Entries merge per problem key; colliding *variant* measurements
@@ -229,21 +248,28 @@ def merge_caches(
     provenance metadata.  Entries whose key carries a kernel-source
     fingerprint different from ``fingerprint`` (default: the current
     :func:`kernel_fingerprint`) were measured through edited kernels —
-    they are dropped rather than merged.  Returns ``(merged,
-    n_dropped)``.
+    they are dropped rather than merged.  With ``shards`` set, entries
+    measured at a different mesh width (:func:`entry_shards`, including
+    legacy keys with no shard tag) are also dropped: their per-shard
+    problem shapes do not match the target mesh.  Returns ``(merged,
+    n_dropped_stale, n_dropped_shards)``.
 
-    Distinct machines never collide by construction (device kind and
-    interpret flag are part of the key), so merging caches from a
-    heterogeneous fleet is lossless.
+    Distinct machines never collide by construction (device kind,
+    interpret flag and shard count are part of the key), so merging
+    caches from a heterogeneous fleet is lossless.
     """
     if fingerprint is None:
         fingerprint = kernel_fingerprint()
     merged: dict[str, TuningEntry] = {}
     dropped = 0
+    dropped_shards = 0
     for cache in caches:
         for key, e in cache.entries.items():
             if entry_fingerprint(key) != fingerprint:
                 dropped += 1
+                continue
+            if shards is not None and entry_shards(key) != shards:
+                dropped_shards += 1
                 continue
             prev = merged.get(key)
             if prev is None:
@@ -255,4 +281,4 @@ def merge_caches(
                 measured = {**prev.measured_s, **e.measured_s}
                 merged[key] = dataclasses.replace(
                     e, problem=dict(e.problem), measured_s=measured)
-    return TuningCache(merged), dropped
+    return TuningCache(merged), dropped, dropped_shards

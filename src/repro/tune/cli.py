@@ -60,6 +60,7 @@ def run_tune(
     warmup: Optional[int] = None,
     repeats: Optional[int] = None,
     tuner: Optional[Autotuner] = None,
+    shards: int = 1,
 ) -> dict:
     """Measure, calibrate, re-search, sweep; returns the JSON report.
 
@@ -79,6 +80,13 @@ def run_tune(
         raise ValueError(f"unknown tune mode {mode!r}; have {TUNE_MODES}")
     hw_cfg = get_target(hw)
     named, tokens = dse_problems(arch, tokens, smoke)
+    if shards > 1:
+        # warm the cache for a sharded search: measure the per-shard
+        # problems a `repro.dse --shards N` run will look up
+        from repro.core.cost_table import shard_streamed_tokens
+
+        tokens = shard_streamed_tokens(tokens, shards)
+        named, tokens = dse_problems(arch, tokens, smoke)
     layer_paths = model_layer_paths(named, top_k)
     if tuner is None:
         kw = {}
@@ -87,7 +95,7 @@ def run_tune(
         if repeats is not None:
             kw["repeats"] = repeats
         tuner = Autotuner(TuningCache.load_or_empty(cache_path), mode,
-                          cache_path=cache_path, **kw)
+                          cache_path=cache_path, shards=shards, **kw)
 
     t0 = time.perf_counter()
     shapes = gemm_work_items(layer_paths, max_shapes=max_shapes)
@@ -144,6 +152,7 @@ def run_tune(
         "device_kind": tuner.device_kind,
         "interpret": tuner.interpret,
         "tokens": tokens,
+        "shards": tuner.shards,
         "top_k": top_k,
         "n_shapes": len(shapes),
         "n_families": len(families),
@@ -182,6 +191,10 @@ def _build_merge_parser() -> argparse.ArgumentParser:
     p.add_argument("--fingerprint", default=None, metavar="HASH",
                    help="accept entries with this kernel-source hash "
                         "(default: the current working tree's)")
+    p.add_argument("--shards", type=int, default=None, metavar="N",
+                   help="accept only entries measured for an N-way mesh "
+                        "(per-shard problem shapes differ per mesh width; "
+                        "default: keep every width)")
     return p
 
 
@@ -193,12 +206,15 @@ def run_merge(argv: Sequence[str]) -> int:
         print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
         return 2
     fp = args.fingerprint or kernel_fingerprint()
-    merged, dropped = merge_caches(caches, fingerprint=fp)
+    merged, dropped, dropped_shards = merge_caches(
+        caches, fingerprint=fp, shards=args.shards)
     merged.save(args.out)
     total_in = sum(len(c) for c in caches)
+    shard_note = (f", {dropped_shards} dropped (shard-shape mismatch vs "
+                  f"s{args.shards})" if args.shards is not None else "")
     print(f"merged {len(args.caches)} caches ({total_in} entries) -> "
           f"{args.out}: {len(merged)} entries kept, {dropped} dropped "
-          f"(fingerprint mismatch vs k{fp})", file=sys.stderr)
+          f"(fingerprint mismatch vs k{fp}){shard_note}", file=sys.stderr)
     return 0
 
 
@@ -221,6 +237,9 @@ def _build_parser() -> argparse.ArgumentParser:
     p.add_argument("--mode", default="cache", choices=TUNE_MODES,
                    help="cache: measure only cache misses (default); "
                         "measure: re-measure and overwrite")
+    p.add_argument("--shards", type=int, default=1, metavar="N",
+                   help="measure per-shard problems for an N-way mesh "
+                        "(matches repro.dse --shards N lookups; default 1)")
     p.add_argument("--max-shapes", type=int, default=None, metavar="N",
                    help="bound the calibration shapes and tuned families "
                         "(smoke/CI runs)")
@@ -252,6 +271,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             max_shapes=args.max_shapes,
             warmup=args.warmup,
             repeats=args.repeats,
+            shards=args.shards,
         )
     except (KeyError, ValueError) as e:
         msg = e.args[0] if e.args else e

@@ -383,9 +383,14 @@ def test_api_plan_state_semantics():
 
 
 def test_kernel_routing_restricted_to_single_device():
-    """Multi-device sharding rules force the sharding-preserving jnp
-    executor (the planned *path* still applies; see docs/plan_format.md)."""
+    """Planned kernels run locally only on a single-device mesh; with
+    multi-device rules the dispatcher asks ``shard_decision`` for a
+    shard_map route and takes the sharding-preserving jnp executor only
+    when the mesh cannot take the problem (rules without a real mesh
+    object here, so the decision declines — tests/test_shard_exec.py
+    covers the accepting side)."""
     from repro.nn.linear import _single_device
+    from repro.plan.sharded import shard_decision
     from repro.sharding import ShardingRules, use_rules
 
     assert _single_device()
@@ -393,6 +398,10 @@ def test_kernel_routing_restricted_to_single_device():
         assert _single_device()
     with use_rules(ShardingRules(axis_sizes={"data": 2, "model": 1})):
         assert not _single_device()
+        from repro.sharding import get_rules
+
+        # no mesh object installed -> no shard route -> jnp fallback
+        assert shard_decision(get_rules(), 64, (8, 8)) is None
 
 
 def test_tiling_clamped_to_runtime_shapes():

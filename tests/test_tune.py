@@ -187,14 +187,15 @@ def test_merge_caches_union_and_last_writer_wins():
     b.tune_gemm(64, 64, 64, "IS", include=[heuristic_blocks(64, 64, 64)])
 
     fp = entry_fingerprint(next(iter(a.cache.entries)))
-    merged, dropped = merge_caches([a.cache, b.cache], fingerprint=fp)
-    assert dropped == 0
+    merged, dropped, dropped_shards = merge_caches(
+        [a.cache, b.cache], fingerprint=fp)
+    assert dropped == 0 and dropped_shards == 0
     assert len(merged) == 2  # union: shared key merges, new key added
     # last writer wins: the colliding entry's measurements come from b
     key = next(k for k in merged.entries if k in a.cache.entries)
     assert merged.entries[key].measured_s == b.cache.entries[key].measured_s
     # merging is idempotent
-    again, _ = merge_caches([merged], fingerprint=fp)
+    again, _, _ = merge_caches([merged], fingerprint=fp)
     assert again.dumps() == merged.dumps()
 
 
@@ -203,8 +204,55 @@ def test_merge_caches_drops_foreign_fingerprints():
 
     a = _stub_tuner(TuningCache())
     a.tune_gemm(96, 160, 512, "OS", include=[heuristic_blocks(96, 160, 512)])
-    merged, dropped = merge_caches([a.cache], fingerprint="0" * 12)
+    merged, dropped, _ = merge_caches([a.cache], fingerprint="0" * 12)
     assert len(merged) == 0 and dropped == 1
+
+
+def test_entry_shards_parsing():
+    from repro.tune import entry_shards
+
+    assert entry_shards("gemm:32x32x32:OS:cpu:interp:s4:kdeadbeef") == 4
+    assert entry_shards("gemm:32x32x32:OS:cpu:interp:s1:kdeadbeef") == 1
+    # pre-shard key: no segment
+    assert entry_shards("gemm:32x32x32:OS:cpu:interp:kdeadbeef") is None
+
+
+def test_tuner_keys_carry_shard_count():
+    t1 = _stub_tuner(TuningCache())
+    t4 = Autotuner(t1.cache, "cache", device_kind="cpu", interpret=True,
+                   measure_gemm_fn=_fake_gemm,
+                   measure_streaming_fn=_fake_streaming,
+                   kernel_fp=t1.kernel_fp, shards=4)
+    k1 = t1.gemm_key(64, 64, 64, "OS")
+    k4 = t4.gemm_key(64, 64, 64, "OS")
+    assert k1 != k4 and ":s1:" in k1 and ":s4:" in k4
+    # a 4-shard measurement never answers a single-device lookup
+    t4.tune_gemm(64, 64, 64, "OS")
+    assert t1.cached_gemm_blocks(64, 64, 64, "OS") is None
+
+
+def test_merge_caches_drops_shard_mismatches():
+    from repro.tune import entry_fingerprint, merge_caches
+
+    a = _stub_tuner(TuningCache())  # shards=1 keys
+    a.tune_gemm(96, 160, 512, "OS", include=[heuristic_blocks(96, 160, 512)])
+    b_cache = TuningCache()
+    b = Autotuner(b_cache, "cache", device_kind="cpu", interpret=True,
+                  measure_gemm_fn=_fake_gemm,
+                  measure_streaming_fn=_fake_streaming,
+                  kernel_fp=a.kernel_fp, shards=4)
+    b.tune_gemm(64, 64, 64, "OS", include=[heuristic_blocks(64, 64, 64)])
+
+    fp = entry_fingerprint(next(iter(a.cache.entries)))
+    # no filter: every mesh width survives (keys never collide)
+    merged, dropped, dropped_shards = merge_caches(
+        [a.cache, b_cache], fingerprint=fp)
+    assert len(merged) == 2 and dropped == 0 and dropped_shards == 0
+    # shard filter: the 1-shard entry is a shard-shape mismatch at s4
+    merged4, dropped, dropped_shards = merge_caches(
+        [a.cache, b_cache], fingerprint=fp, shards=4)
+    assert len(merged4) == 1 and dropped == 0 and dropped_shards == 1
+    assert all(":s4:" in k for k in merged4.entries)
 
 
 def test_merge_cli_roundtrip(tmp_path, capsys):
@@ -513,6 +561,78 @@ def test_run_dse_tune_composes_with_hw_search(tmp_path, monkeypatch):
     assert report["hw_search"]["n_candidates"] >= 64
     assert set(report["tune"]["calibration"]) == {"IS", "OS", "WS"}
     assert report["tune"]["correction"]["model"] == "shape-bucket-geomean"
+
+
+def test_combine_phase_tables_calibrates_each_phase_at_own_shapes():
+    """ROADMAP serving follow-on (a): the throughput objective's combined
+    table applies the measured correction per phase *at that phase's own
+    GEMM shapes* — decode GEMMs are skinnier, so the shape-aware model
+    must resolve each phase's cells against its own candidate paths."""
+    from types import SimpleNamespace
+
+    from repro.core.dse import combine_phase_tables
+
+    df = Dataflow.OS
+    key = (0, 0, (1, 1), df)
+    pre = {key: 10.0}
+    dec = {key: 1.0}
+
+    def path_with_gemm(M, K, N):
+        g = SimpleNamespace(M=M, K=K, N=N, macs=M * K * N)
+        return SimpleNamespace(gemms=(g,))
+
+    prefill_paths = [[path_with_gemm(1024, 64, 64)]]
+    decode_paths = [[path_with_gemm(8, 64, 64)]]
+
+    class ShapeScale:
+        def scale(self, M, K, N, dataflow):
+            return 2.0 if M >= 1024 else 5.0
+
+    out = combine_phase_tables(
+        pre, dec, w_prefill=1.0, w_decode=3.0,
+        calibration=ShapeScale(),
+        prefill_paths=prefill_paths, decode_paths=decode_paths)
+    # prefill cell scaled by 2 (big GEMM), decode cell by 5 (skinny)
+    assert out[key] == pytest.approx(1.0 * 2.0 * 10.0 + 3.0 * 5.0 * 1.0)
+
+    # flat per-dataflow calibration scales both phases uniformly
+    flat = combine_phase_tables(pre, dec, w_decode=3.0,
+                                calibration={df.value: 2.0})
+    assert flat[key] == pytest.approx(2.0 * (10.0 + 3.0 * 1.0))
+    # and no calibration leaves the weighted sum untouched
+    plain = combine_phase_tables(pre, dec, w_decode=3.0)
+    assert plain[key] == pytest.approx(13.0)
+
+
+def test_run_dse_tune_throughput_calibrated(tmp_path, monkeypatch):
+    """--tune now composes with --objective throughput: the measured
+    correction rescales both phase tables before the decode-weighted
+    combine (previously rejected as latency-only)."""
+    import repro.tune.measure as tmeasure
+    from repro.dse_cli import run_dse
+
+    monkeypatch.setattr(tmeasure, "measure_gemm", _fake_gemm)
+    monkeypatch.setattr(tmeasure, "measure_streaming", _fake_streaming)
+    cache = str(tmp_path / "cache.json")
+
+    report = run_dse("tt-lm-100m", smoke=True, top_k=2, tokens=32,
+                     objective="throughput", tune="cache", tune_cache=cache)
+    assert report["objective"] == "throughput"
+    assert set(report["tune"]["calibration"]) == {"IS", "OS", "WS"}
+    assert report["tune"]["n_measured"] > 0
+    assert report["serving"]["calibrated"] is True
+    # the combined objective is in calibrated units; the analytic phase
+    # split stays analytic seconds
+    assert report["serving"]["total_prefill_s"] > 0
+    assert report["serving"]["total_decode_step_s"] > 0
+
+    untuned = run_dse("tt-lm-100m", smoke=True, top_k=2, tokens=32,
+                      objective="throughput")
+    assert untuned["serving"]["calibrated"] is False
+    w = untuned["serving"]["decode_weight"]
+    assert untuned["total_objective"] == pytest.approx(
+        untuned["serving"]["total_prefill_s"]
+        + w * untuned["serving"]["total_decode_step_s"])
 
 
 def test_run_tune_cli_pipeline_with_stub_tuner(tmp_path):
