@@ -17,6 +17,7 @@ import traceback
 from . import (
     bench_dse,
     bench_dse_overhead,
+    bench_fused_exec,
     bench_search,
     bench_shard_scaling,
     bench_plan_exec,
@@ -48,6 +49,7 @@ SUITES = {
     "bench_search": bench_search.run,
     "bench_shard": bench_shard_scaling.run,
     "bench_serve": bench_serve_wallclock.run,
+    "bench_fused": bench_fused_exec.run,
 }
 
 

@@ -46,6 +46,7 @@ from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
+from . import fusion
 from .paths import CandidatePath
 from .simulator import (
     ALL_DATAFLOWS,
@@ -55,6 +56,7 @@ from .simulator import (
     Partitioning,
     _dependency_levels,
     _split_gemm,
+    fused_layer_latency,
     gemm_cost_model,
 )
 
@@ -297,6 +299,80 @@ def build_cost_tables_hw(
             n_unique_layers=len(unique_layers),
         )
         for h in range(len(hw_list))
+    )
+
+
+def fused_cost_tables(
+    layer_paths: Sequence[Sequence[CandidatePath]],
+    layer_networks: Sequence,        # Sequence[TensorNetwork], aligned
+    hw: HardwareConfig,
+    *,
+    block_tokens: int,
+    budget_bytes: int,
+    partitionings: Sequence[Partitioning] = ALL_PARTITIONINGS,
+    dataflows: Sequence[Dataflow] = ALL_DATAFLOWS,
+    base: Optional[CostTables] = None,
+) -> CostTables:
+    """Fusion-aware cost tables: fused chain runs charge no interior HBM.
+
+    For every (layer, path) whose steps segment into at least one fused
+    chain run under ``budget_bytes`` (``repro.core.fusion.segment_path``
+    at ``block_tokens`` — the same rule the plan compiler stamps
+    ``LayerPlan.segments`` with), the monolithic ``(1, 1)`` cells are
+    replaced by :func:`simulator.fused_layer_latency`: interior
+    intermediates charge zero HBM bytes, the chain operand's reads are
+    free, and each run pays one launch overhead.  Split-partitioning
+    cells and unfusable paths keep the spill-per-step numbers, so the
+    result is a drop-in ``global_search(table=...)`` override — paths
+    that *segment well* win cells they would otherwise lose to
+    lower-MAC but spill-heavy orders.
+
+    ``layer_networks`` supplies the edge structure the segmentation
+    reads (any batch size — the batch dim is re-blocked to
+    ``block_tokens``).  Pass ``base`` to reuse an already-built
+    spill-always table.
+    """
+    t0 = time.perf_counter()
+    partitionings = tuple(partitionings)
+    dataflows = tuple(dataflows)
+    if len(layer_paths) != len(layer_networks):
+        raise ValueError(
+            f"{len(layer_paths)} path lists vs {len(layer_networks)} networks")
+    if base is None:
+        base = build_cost_tables(layer_paths, hw, partitionings, dataflows)
+    seconds = dict(base.seconds)
+    traffic = dict(base.traffic_words)
+
+    # identical layers share the segmentation (and the fused cells): the
+    # segmentation depends only on the re-blocked entry dims and the steps
+    seg_cache: dict[tuple, tuple] = {}
+    for l, (paths, tn) in enumerate(zip(layer_paths, layer_networks)):
+        entries = tuple(fusion._entry_dims(tn, block_tokens,
+                                           fusion.BATCH_EDGE))
+        for p_idx, path in enumerate(paths):
+            ck = (entries, tuple(path.steps))
+            segs = seg_cache.get(ck)
+            if segs is None:
+                segs = fusion.segment_path(
+                    tn, path.steps, block_tokens=block_tokens,
+                    budget_bytes=budget_bytes)
+                seg_cache[ck] = segs
+            if not fusion.has_fused(segs):
+                continue
+            roles = fusion.step_roles(len(tn.nodes), path.steps, segs)
+            for d in dataflows:
+                rep = fused_layer_latency(path, d, hw, segs, roles)
+                if (1, 1) in partitionings:
+                    seconds[(l, p_idx, (1, 1), d)] = rep.seconds
+                    traffic[(l, p_idx, (1, 1), d)] = rep.traffic_words
+    return CostTables(
+        seconds=seconds,
+        traffic_words=traffic,
+        macs=dict(base.macs),
+        build_seconds=base.build_seconds + (time.perf_counter() - t0),
+        n_cells=base.n_cells,
+        n_unique_gemm_evals=base.n_unique_gemm_evals,
+        n_unique_layers=base.n_unique_layers,
     )
 
 

@@ -279,3 +279,70 @@ def simulate(
 ) -> float:
     """Latency in seconds — the ``Simulate(p, c, d)`` oracle of Algorithm 1."""
     return layer_latency(path, df, part, hw).seconds
+
+
+# ---------------------------------------------------------------------------
+# fused-segment accounting (repro.core.fusion chain runs)
+# ---------------------------------------------------------------------------
+
+def fused_segment_cost(
+    gemms: Sequence[GemmShape],
+    roles: Sequence,            # Sequence[fusion.StepRole] slice
+    hw: HardwareConfig,
+) -> tuple[float, float]:
+    """``(cycles, traffic_words)`` of one fused chain run.
+
+    Every step inside a fused run executes OS-style (the fused kernel's
+    in-VMEM fallback, see ``kernels/fused_path.py``): compute is the OS
+    pipeline term per step, but the HBM traffic drops the terms the
+    fusion keeps on-chip — the chain operand's reads (it is the previous
+    step's VMEM-resident result) and every interior output's writes
+    (fp32 VMEM scratch).  The whole run pays ONE per-GEMM launch
+    overhead, not one per step.
+    """
+    R, C = hw.pe_rows, hw.pe_cols
+    compute = 0.0
+    traffic = 0.0
+    for g, role in zip(gemms, roles):
+        compute += float(_cdiv(g.M, R) * _cdiv(g.N, C) * (g.K + R + C - 2))
+        a = (0.0 if role.chain_operand == "a"
+             else float(_reads(g.M * g.K, _cdiv(g.N, C), hw)))
+        b = (0.0 if role.chain_operand == "b"
+             else float(_reads(g.K * g.N, _cdiv(g.M, R), hw)))
+        c = 0.0 if role.interior_output else float(g.M * g.N)
+        traffic += a + b + c
+    cycles = (max(compute, traffic / hw.dram_words_per_cycle)
+              + hw.gemm_overhead_cycles)
+    return cycles, traffic
+
+
+def fused_layer_latency(
+    path: CandidatePath,
+    df: Dataflow,
+    hw: HardwareConfig,
+    segments: Sequence[tuple[int, int]],
+    roles: Sequence,            # Sequence[fusion.StepRole], one per step
+) -> LayerReport:
+    """Monolithic-layer latency under a fusion segmentation.
+
+    Singleton segments keep the per-step model with dataflow ``df``
+    (their kernels run stand-alone, exactly as in :func:`layer_latency`);
+    fused runs use :func:`fused_segment_cost`.  Only the monolithic
+    ``(1, 1)`` partitioning is modeled — fused runs serialize a chain, so
+    half-core pairing never applies inside one.
+    """
+    gemms = path.gemms
+    total_macs = sum(g.macs for g in gemms)
+    cycles = 0.0
+    traffic = 0.0
+    for (s, e) in segments:
+        if e - s >= 2:
+            cyc, tra = fused_segment_cost(gemms[s:e], roles[s:e], hw)
+        else:
+            rep = gemm_latency(gemms[s], df, hw)
+            cyc, tra = rep.cycles, rep.traffic_words
+        cycles += cyc
+        traffic += tra
+    util = total_macs / (cycles * hw.macs_per_cycle) if cycles else 0.0
+    return LayerReport(cycles, cycles / hw.freq_hz, total_macs, util,
+                       traffic, 0)

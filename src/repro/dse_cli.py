@@ -229,6 +229,7 @@ def run_dse(
     rank_search: str = "off",
     accuracy_budget: Optional[float] = None,
     shards: Optional[int] = None,
+    fused_cost: bool = False,
 ) -> dict:
     """Run Algorithm 1 end-to-end; returns the JSON-serializable report.
 
@@ -276,6 +277,8 @@ def run_dse(
         _check_train_compatible(objective, engine)  # fail before any search
         _check_tune_compatible(tune, "both", objective, hw_search)
         _check_rank_compatible(rank_search, "both", objective, engine, tune)
+        _check_fused_compatible(fused_cost, "both", objective, engine,
+                                hw_search, search, rank_search)
         infer, _, _, _, _, _ = _run_dse(
             arch, hw, top_k, objective, tokens, smoke, engine, "infer",
             hw_search, hw_budget, search=search, search_budget=search_budget,
@@ -289,7 +292,7 @@ def run_dse(
         arch, hw, top_k, objective, tokens, smoke, engine, mode, hw_search,
         hw_budget, tune, tune_cache, serve_gen, serve_slots, decode_tokens,
         search, search_budget, search_seed, rank_search, accuracy_budget,
-        shards)
+        shards, fused_cost)
     _save_tuner(tuner)
     return report
 
@@ -361,6 +364,7 @@ def run_dse_plan(
     rank_search: str = "off",
     accuracy_budget: Optional[float] = None,
     shards: Optional[int] = None,
+    fused_cost: bool = False,
 ):
     """Run the DSE and compile its result into an ExecutionPlan.
 
@@ -400,6 +404,8 @@ def run_dse_plan(
         _check_train_compatible(objective, engine)  # fail before any search
         _check_tune_compatible(tune, "both", objective, hw_search)
         _check_rank_compatible(rank_search, "both", objective, engine, tune)
+        _check_fused_compatible(fused_cost, "both", objective, engine,
+                                hw_search, search, rank_search)
         infer_report, _, _, _, _, _ = _run_dse(
             arch, hw, top_k, objective, tokens, smoke, engine, "infer",
             hw_search, hw_budget, search=search, search_budget=search_budget,
@@ -410,7 +416,7 @@ def run_dse_plan(
         hw_search, hw_budget, tune, tune_cache,
         serve_gen, serve_slots, decode_tokens,
         search, search_budget, search_seed, rank_search, accuracy_budget,
-        shards)
+        shards, fused_cost)
     factorizations = None
     rank_report = report.get("rank_search")
     if rank_report is not None and rank_report.get("plan_embeddable"):
@@ -595,6 +601,48 @@ def _check_rank_compatible(rank_search: str, mode: str, objective: str,
             "need per-candidate GEMM coverage (open item)")
 
 
+def _check_fused_compatible(fused_cost: bool, mode: str, objective: str,
+                            engine: str, hw_search: str, search: str,
+                            rank_search: str) -> None:
+    """Reject combinations the fusion-aware cost tables cannot honour.
+
+    ``--fused-cost`` overrides the (1,1)-partitioning cells of the
+    inference seconds/traffic tables with the fused-segment accounting
+    (``repro.core.cost_table.fused_cost_tables``), so it composes with
+    the latency and EDP objectives on a fixed target under the
+    exhaustive vectorized search.  The throughput objective would need
+    both phase tables fused, the architecture co-search would need the
+    per-candidate hw-batched engine to know about segments, the guided
+    explorer reads raw tables rather than the provided objective table,
+    and the rank search re-derives networks per candidate — all open
+    items (ROADMAP.md)."""
+    if not fused_cost:
+        return
+    if mode != "infer":
+        raise ValueError(
+            "--fused-cost overrides the inference cost tables; "
+            f"--mode {mode} is spill-always only for now")
+    if objective not in ("latency", "edp"):
+        raise ValueError(
+            "--fused-cost composes with the latency and EDP objectives; "
+            f"--objective {objective} would need fused per-phase tables "
+            "(open item)")
+    if engine == "scalar":
+        raise ValueError("--fused-cost requires the vectorized engine")
+    if hw_search != "off":
+        raise ValueError(
+            "--fused-cost with --hw-search would need fused hw-batched "
+            "tables per candidate (open item)")
+    if search != "exhaustive":
+        raise ValueError(
+            "--fused-cost requires --search exhaustive (the guided "
+            "explorer rebuilds its own tables)")
+    if rank_search != "off":
+        raise ValueError(
+            "--fused-cost with --rank-search would need per-candidate "
+            "segmentation (open item)")
+
+
 def _make_tuner(tune: str, tune_cache: Optional[str], shards: int = 1):
     """Build the Autotuner over the persistent cache (lazy import)."""
     from repro.tune import Autotuner, DEFAULT_CACHE_PATH, TuningCache
@@ -638,6 +686,83 @@ def _save_tuner(tuner) -> None:
         tuner.save()
 
 
+def _apply_fused_cost(tables, named, layer_paths, hw_cfg, tokens, tuner):
+    """Overlay the fusion-aware accounting on the inference cost tables.
+
+    Re-costs every fuseable monolithic cell with the fused-segment model
+    (``core.cost_table.fused_cost_tables``) at the same ``block_tokens``
+    the plan compiler's tiling heuristic would stream and the same VMEM
+    budget its segmentation pass enforces (fixed target => no hw caps,
+    ``_streaming_budget(None)``).  With a live ``tuner``, each fused
+    layer is additionally *measured* — fused vs per-step wall-clock on
+    this machine (``Autotuner.tune_fused``) — and its fused cells are
+    rescaled by measured/analytic fusion-advantage disagreement, so
+    ``--tune cache|measure`` calibrates the fused path too.
+
+    Returns ``(tables, report_section)``.
+    """
+    from repro.core import fusion
+    from repro.core.cost_table import fused_cost_tables
+    from repro.plan.compiler import _pow2_le, _streaming_budget
+
+    block_tokens = max(8, _pow2_le(min(256, tokens)))
+    budget_bytes = _streaming_budget(None)
+    base_seconds = dict(tables.seconds)
+    t0 = time.perf_counter()
+    tables = fused_cost_tables(
+        layer_paths, [tn for _, tn in named], hw_cfg,
+        block_tokens=block_tokens, budget_bytes=budget_bytes, base=tables)
+    fused_cells = sorted(k for k, s in tables.seconds.items()
+                         if s != base_seconds[k])
+    tune_rows = None
+    if tuner is not None and fused_cells:
+        tune_rows = []
+        done: dict[str, float] = {}  # layer signature -> measured scale
+        from repro.tune import network_signature
+
+        for li, ((name, tn), paths) in enumerate(zip(named, layer_paths)):
+            keys = [k for k in fused_cells if k[0] == li]
+            if not keys:
+                continue
+            p_idx = min(k[1] for k in keys)
+            steps = tuple(tuple(s) for s in paths[p_idx].steps)
+            sig = network_signature(tn, steps)
+            if sig not in done:
+                segs = fusion.segment_path(
+                    tn, steps, block_tokens=block_tokens,
+                    budget_bytes=budget_bytes)
+                meas = tuner.tune_fused(
+                    tn, steps, segs, tokens, include=(block_tokens,),
+                    budget_bytes=budget_bytes)
+                scale = 1.0
+                if meas is not None and meas["per_step_s"] > 0:
+                    k_rep = next(k for k in keys if k[1] == p_idx)
+                    analytic_adv = tables.seconds[k_rep] / base_seconds[k_rep]
+                    measured_adv = meas["fused_s"] / meas["per_step_s"]
+                    if analytic_adv > 0 and measured_adv > 0:
+                        scale = measured_adv / analytic_adv
+                done[sig] = scale
+                tune_rows.append({
+                    "layer": name,
+                    "path_index": int(p_idx),
+                    "measured": meas,
+                    "scale": scale,
+                })
+            if done[sig] != 1.0:
+                for k in keys:
+                    tables.seconds[k] *= done[sig]
+    report = {
+        "enabled": True,
+        "block_tokens": int(block_tokens),
+        "budget_bytes": int(budget_bytes),
+        "n_fused_cells": len(fused_cells),
+        "n_fused_layers": len({k[0] for k in fused_cells}),
+        "tune": tune_rows,
+        "build_s": time.perf_counter() - t0,
+    }
+    return tables, report
+
+
 def _run_dse(
     arch: str,
     hw: str = "fpga_vu9p",
@@ -660,6 +785,7 @@ def _run_dse(
     rank_search: str = "off",
     accuracy_budget: Optional[float] = None,
     shards: Optional[int] = None,
+    fused_cost: bool = False,
 ):
     """Shared pipeline; returns (report, named_layers, DSEResult, hw_cfg,
     tuner, calibration).
@@ -735,6 +861,8 @@ def _run_dse(
     if search_budget is not None and search != "guided":
         raise ValueError("search_budget requires search='guided'")
     _check_tune_compatible(tune, mode, objective, hw_search)
+    _check_fused_compatible(fused_cost, mode, objective, engine, hw_search,
+                            search, rank_search)
     shard_ctx = _shard_context(shards)
     if rank_search != "off":
         _check_rank_compatible(rank_search, mode, objective, engine, tune)
@@ -788,6 +916,7 @@ def _run_dse(
     tuner = None
     tune_report = None
     calibration = None
+    fused_report = None
     if tune != "off" and mode == "train":
         # ROADMAP gap (b): train-mode plans may serve measured tilings —
         # forward ops through the usual measured sweep, backward ops from
@@ -927,6 +1056,11 @@ def _run_dse(
         tables = build_cost_tables(layer_paths, hw_cfg, all_parts)
         seconds_table = tables.seconds
         table_build_s = tables.build_seconds
+        if fused_cost:
+            tables, fused_report = _apply_fused_cost(
+                tables, named, layer_paths, hw_cfg, tokens, tuner)
+            seconds_table = tables.seconds
+            table_build_s += fused_report["build_s"]
         if objective == "edp":
             obj_table = tables.edp(hw_cfg)
         elif objective == "throughput":
@@ -1019,6 +1153,7 @@ def _run_dse(
         "hw_chosen": res.hw.name if res.hw is not None else hw,
         "hw_search": hw_search_report,
         "tune": tune_report,
+        "fused_cost": fused_report,
         "mode": mode,
         "objective": "train-latency" if mode == "train" else objective,
         "top_k": top_k,
@@ -1327,6 +1462,15 @@ def _build_parser() -> argparse.ArgumentParser:
                         "the report, --emit-plan writes schema v2 with "
                         "backward entries); both: run both and report the "
                         "divergent layer choices")
+    p.add_argument("--fused-cost", action="store_true",
+                   help="fusion-aware cost tables: re-cost fuseable "
+                        "(1,1)-partitioned paths with the fused-segment "
+                        "accounting (interior intermediates charge zero "
+                        "HBM traffic, one launch overhead per chain run) "
+                        "so the argmin can prefer paths that segment well; "
+                        "with --tune the fused advantage is additionally "
+                        "measured per layer (infer mode, fixed target, "
+                        "latency/EDP objectives, exhaustive search)")
     p.add_argument("--tokens", type=int, default=None,
                    help="streamed tokens per projection (default 1024; "
                         "vision archs: im2col batch, default 1)")
@@ -1438,6 +1582,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 mode="infer", tune=args.tune, tune_cache=args.tune_cache,
                 search=args.search, search_budget=args.search_budget,
                 search_seed=args.search_seed, shards=args.shards,
+                fused_cost=args.fused_cost,
             )
             dec_tokens = (args.decode_tokens if args.decode_tokens is not None
                           else args.serve_slots)
@@ -1482,6 +1627,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 rank_search=args.rank_search,
                 accuracy_budget=args.accuracy_budget,
                 shards=args.shards,
+                fused_cost=args.fused_cost,
             )
             plan.save(args.emit_plan)
             backends = sorted({lp.backend for lp in plan.layers})
@@ -1514,6 +1660,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 rank_search=args.rank_search,
                 accuracy_budget=args.accuracy_budget,
                 shards=args.shards,
+                fused_cost=args.fused_cost,
             )
     except (KeyError, ValueError) as e:
         msg = e.args[0] if e.args else e

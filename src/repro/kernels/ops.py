@@ -19,6 +19,7 @@ from repro.core.paths import CandidatePath
 from repro.core.tensor_network import TensorNetwork
 from . import tt_gemm as _tt_gemm
 from . import streaming_tt as _streaming
+from . import fused_path as _fused
 
 
 def _default_interpret() -> bool:
@@ -97,6 +98,31 @@ def tt_linear(
             xp, cores, tn, path, block_tokens=block_tokens, interpret=interpret
         )
     return y[:tokens]
+
+
+def fused_segment(
+    work,
+    steps,
+    block_tokens: int = 256,
+    block_m: int = 128,
+    block_k: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+    out_dtype=None,
+):
+    """Execute a chain run of contraction-path steps in one ``pallas_call``.
+
+    Thin wrapper over :func:`fused_path.fused_segment_contract` resolving
+    ``interpret`` from the default backend; ``work`` is the live
+    ``execute_path`` work list and ``steps`` the current-index pairs of
+    the segment.  Returns ``(result_edges, result)`` — the entry the
+    sequential per-step route would have appended.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fused.fused_segment_contract(
+        work, steps, block_tokens=block_tokens, block_m=block_m,
+        block_k=block_k, block_n=block_n,
+        out_dtype=out_dtype, interpret=interpret)
 
 
 def _next_pow2(n: int) -> int:

@@ -56,34 +56,40 @@ def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
 def _ws_kernel(a_ref, b_ref, o_ref, *, n_k: int):
     """Weight-stationary: grid (k, n, m), m innermost; B block pinned.
 
-    The output block is revisited once per k step (non-consecutive), so
-    partial sums round-trip through HBM — the WS traffic cost the
-    simulator charges as ``C * (2*k_folds - 1)``.
+    The output block is revisited once per k step (non-consecutive, so a
+    VMEM scratch accumulator cannot carry it); partial sums round-trip
+    through the fp32 output buffer — the WS traffic cost the simulator
+    charges as ``C * (2*k_folds - 1)``.  ``o_ref`` is always fp32
+    (``tt_gemm`` casts to the requested dtype after the call), so cross-k
+    accumulation never loses precision to a narrow output dtype.
     """
     k = pl.program_id(0)
     part = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
 
     @pl.when(k == 0)
     def _first():
-        o_ref[...] = part.astype(o_ref.dtype)
+        o_ref[...] = part
 
     @pl.when(k > 0)
     def _acc():
-        o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
+        o_ref[...] = o_ref[...] + part
 
 
 def _is_kernel(a_ref, b_ref, o_ref, *, n_k: int):
-    """Input-stationary: grid (m, k, n), n innermost; A block pinned."""
+    """Input-stationary: grid (m, k, n), n innermost; A block pinned.
+
+    Same fp32 partial-sum contract as :func:`_ws_kernel`.
+    """
     k = pl.program_id(1)
     part = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
 
     @pl.when(k == 0)
     def _first():
-        o_ref[...] = part.astype(o_ref.dtype)
+        o_ref[...] = part
 
     @pl.when(k > 0)
     def _acc():
-        o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
+        o_ref[...] = o_ref[...] + part
 
 
 def _pad_to_block(x: jax.Array, axis: int, block: int) -> jax.Array:
@@ -127,7 +133,11 @@ def tt_gemm(
         return out[:m, :n]
     out_dtype = out_dtype or a.dtype
     n_m, n_k, n_n = m // block_m, k // block_k, n // block_n
-    out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)
+    # WS/IS revisit output blocks non-consecutively per k-fold, so their
+    # cross-k partials accumulate in an fp32 output buffer (cast once
+    # below) — matching the OS kernel's fp32 scratch precision.
+    inner_dtype = out_dtype if dataflow == "OS" else jnp.float32
+    out_shape = jax.ShapeDtypeStruct((m, n), inner_dtype)
 
     if dataflow == "OS":
         grid = (n_m, n_n, n_k)
@@ -165,7 +175,7 @@ def tt_gemm(
             dimension_semantics=dims
         )
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[a_spec, b_spec],
@@ -175,6 +185,7 @@ def tt_gemm(
         interpret=interpret,
         **kwargs,
     )(a, b)
+    return out.astype(out_dtype)
 
 
 def pltpu_accumulator(shape: tuple[int, int]):

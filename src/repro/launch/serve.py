@@ -144,7 +144,11 @@ def main(argv=None) -> int:
     mesh = make_test_mesh()
     rules = make_rules(cfg, shape, mesh)
 
-    from repro.plan import execution_log, reset_execution_log
+    from repro.plan import (
+        execution_log,
+        execution_log_dropped,
+        reset_execution_log,
+    )
 
     reset_execution_log()
     t0 = time.perf_counter()
@@ -208,6 +212,19 @@ def main(argv=None) -> int:
         if tilings:
             print("kernel tilings (block_m,k,n,tokens): "
                   + " ".join(str(t) for t in tilings))
+        seg_recs = [r for r in log if r.get("segment")]
+        if seg_recs:
+            fused = [r for r in seg_recs
+                     if r["segment"][1] - r["segment"][0] >= 2]
+            n_steps = sum(r["segment"][1] - r["segment"][0] for r in fused)
+            print(f"fused segments (trace-time): {len(seg_recs)} segment "
+                  f"records, {len(fused)} fused chain runs ({n_steps} path "
+                  "steps with VMEM-resident intermediates)")
+        dropped = execution_log_dropped()
+        if dropped:
+            print(f"NOTE: the execution log ring dropped {dropped} oldest "
+                  f"records (cap {len(log)}); trace-time counts above are "
+                  "lower bounds")
         meshes = sorted({r.get("mesh", "") for r in log} - {""})
         if meshes:
             shapes = sorted({tuple(r["shard_shape"]) for r in log

@@ -129,6 +129,11 @@ def main() -> None:
                           if r.get("phase") == "bwd"})
             print(f"planned execution under grad: fwd backends {fwd}, "
                   f"bwd backends {bwd}")
+            fused = [r for r in log if r.get("segment")
+                     and r["segment"][1] - r["segment"][0] >= 2]
+            if fused:
+                print(f"fused segments under grad: {len(fused)} chain runs "
+                      "(VMEM-resident intermediates)")
             meshes = sorted({r.get("mesh", "") for r in log} - {""})
             if meshes:
                 print(f"sharded planned execution: mesh {' '.join(meshes)} "

@@ -25,6 +25,7 @@ from .compiler import (
     base_name,
     batch_dim,
     check_plan_for_config,
+    choose_segments,
     compile_plan,
     streaming_fits,
     validate_plan,
@@ -32,6 +33,7 @@ from .compiler import (
 from .executor import (
     as_candidate_path,
     execution_log,
+    execution_log_dropped,
     execution_stream,
     planned_tt_linear,
     record_execution,
@@ -46,9 +48,10 @@ __all__ = [
     "BackwardOp",
     "ExecutionPlan", "Factorization", "LayerPlan", "PlanSharding",
     "Tiling", "load_plan", "migrate_plan_json",
-    "base_name", "batch_dim", "check_plan_for_config", "compile_plan",
-    "streaming_fits", "validate_plan",
-    "as_candidate_path", "execution_log", "execution_stream",
+    "base_name", "batch_dim", "check_plan_for_config", "choose_segments",
+    "compile_plan", "streaming_fits", "validate_plan",
+    "as_candidate_path", "execution_log", "execution_log_dropped",
+    "execution_stream",
     "planned_tt_linear", "record_execution", "reset_execution_log",
     "shard_execution",
     "ShardDecision", "shard_decision", "sharded_tt_linear",

@@ -37,6 +37,7 @@ import math
 import re
 from typing import Mapping, Optional, Sequence
 
+from repro.core import fusion
 from repro.core.backward import backward_networks
 from repro.core.dse import DSEResult, LayerChoice
 from repro.core.paths import CandidatePath
@@ -224,6 +225,28 @@ def _measured_tiling(
         if bt is not None:
             return dataclasses.replace(heuristic, block_tokens=bt)
     return heuristic
+
+
+def choose_segments(
+    tn: TensorNetwork,
+    steps,
+    tiling: Tiling,
+    hw: Optional[HardwareConfig] = None,
+) -> Optional[tuple[tuple[int, int], ...]]:
+    """Fusion segmentation for a ``tt_gemm`` layer (``None`` = nothing fuses).
+
+    Greedy maximal chain runs (``repro.core.fusion.segment_path``) under
+    the same on-chip budget the streaming backend gets
+    (:func:`_streaming_budget`), at the plan's token-block size.  The
+    plan only records segments when at least one run spans >= 2 steps —
+    an all-singleton segmentation is the absent-on-wire default, so
+    pre-fusion plans and unfusable paths serialize identically.
+    """
+    segs = fusion.segment_path(
+        tn, tuple(tuple(s) for s in steps),
+        block_tokens=tiling.block_tokens,
+        budget_bytes=_streaming_budget(hw))
+    return segs if fusion.has_fused(segs) else None
 
 
 def choose_backend(
@@ -420,6 +443,13 @@ def validate_plan(
                 f"{lp.name}: plan step indices {list(map(list, lp.path_steps))} "
                 "do not describe a valid pairwise contraction of "
                 f"{want_nodes} nodes (corrupted or hand-edited plan?)")
+        if (lp.segments is not None and fusion.has_fused(lp.segments)
+                and len(lp.path_steps) == len(tn.nodes) - 1
+                and _steps_in_range(len(tn.nodes), lp.path_steps)):
+            problems.extend(
+                f"{lp.name}: {p}"
+                for p in fusion.chain_problems(tn, lp.path_steps,
+                                               lp.segments))
         if lp.backward and lp.factorization is None:
             want = {"dx"} | {n.name for n in tn.nodes if n.kind != "input"}
             got = {op.wrt for op in lp.backward}
@@ -583,6 +613,8 @@ def compile_plan(
             tiling = _measured_tiling(tn, choice, tiling, be,
                                       tokens or batch_dim(tn), tuner,
                                       tile_hw)
+        segments = (choose_segments(tn, choice.path.steps, tiling, tile_hw)
+                    if be == "tt_gemm" else None)
         by_family[name] = LayerPlan(
             name=name,
             path_index=choice.path_index,
@@ -595,6 +627,7 @@ def compile_plan(
                                        tilings=tilings, tuner=tuner),
             factorization=(factorizations.get(name)
                            if factorizations is not None else None),
+            segments=segments,
             macs=choice.path.macs,
             latency_s=choice.latency_s,
             bwd_latency_s=choice.bwd_latency_s,

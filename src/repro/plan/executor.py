@@ -45,6 +45,7 @@ from typing import Iterator, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import fusion
 from repro.core.backward import backward_networks, grad_input_network
 from repro.core.contraction import core_tensors, execute_path
 from repro.core.paths import CandidatePath, find_topk_paths
@@ -57,7 +58,14 @@ from .schema import BackwardOp, LayerPlan
 # trace-time execution log
 # ---------------------------------------------------------------------------
 
+#: ring capacity: long-running serving loops retrace at many token
+#: counts; the log keeps the most recent records, and the drop counter
+#: (``execution_log_dropped``) lets summary consumers state when their
+#: window is partial instead of silently under-counting
+_EXEC_LOG_MAX = 4096
+
 _EXEC_LOG: list[dict] = []
+_EXEC_DROPPED = 0
 
 #: serving-stream tag stack (``execution_stream``): records appended
 #: inside the context carry ``stream`` = the innermost tag, so the serve
@@ -71,12 +79,23 @@ _SHARD: list[tuple[str, tuple[int, ...]]] = []
 
 
 def reset_execution_log() -> None:
+    global _EXEC_DROPPED
     _EXEC_LOG.clear()
+    _EXEC_DROPPED = 0
 
 
 def execution_log() -> tuple[dict, ...]:
-    """Records of planned executions since the last reset (trace-time)."""
+    """Records of planned executions since the last reset (trace-time).
+
+    At most the newest :data:`_EXEC_LOG_MAX` records are retained;
+    :func:`execution_log_dropped` counts the ones that aged out.
+    """
     return tuple(_EXEC_LOG)
+
+
+def execution_log_dropped() -> int:
+    """Records evicted from the ring since the last reset."""
+    return _EXEC_DROPPED
 
 
 @contextlib.contextmanager
@@ -124,6 +143,7 @@ def record_execution(
     wrt: Optional[str] = None,
     path_steps=None,
     tiling=None,
+    segment: Optional[tuple[int, int]] = None,
 ) -> None:
     """Append one planned-execution record (called at trace time).
 
@@ -131,8 +151,11 @@ def record_execution(
     records pass the per-gradient op's.  Logging the blocks makes
     "the kernel tilings follow the plan's (searched) architecture" an
     assertable property, not an inference — the serve driver and
-    ``tests/test_hw.py`` both read it.
+    ``tests/test_hw.py`` both read it.  ``segment`` marks per-segment
+    provenance records of a fusion-segmented layer (the step range the
+    record covers); the layer-level record carries no segment.
     """
+    global _EXEC_DROPPED
     rec = {
         "name": lp.name,
         "backend": backend if backend is not None else lp.backend,
@@ -148,6 +171,11 @@ def record_execution(
     }
     if wrt is not None:
         rec["wrt"] = wrt
+    if segment is not None:
+        rec["segment"] = [int(segment[0]), int(segment[1])]
+    if len(_EXEC_LOG) >= _EXEC_LOG_MAX:
+        del _EXEC_LOG[0]
+        _EXEC_DROPPED += 1
     _EXEC_LOG.append(rec)
 
 
@@ -184,14 +212,35 @@ def _gemm_contract(lp: LayerPlan, tiling, interpret: Optional[bool]):
     )
 
 
-@functools.lru_cache(maxsize=4096)
+def _bwd_token_bucket(tokens: int) -> int:
+    """Pow2 bucket for the backward-path cache key.
+
+    A serving/decode loop retraces at many distinct token counts; keying
+    the derivation cache on the raw count would re-run the path search
+    (and grow the cache) once per count.  The MAC-optimal backward
+    contraction *order* is stable within a pow2 bucket (asserted by
+    ``tests/test_fused_exec.py``), so the bucket is the cache key — the
+    returned steps are pure index pairs, valid at any batch size.
+    """
+    p = 1
+    while p < max(1, tokens):
+        p *= 2
+    return p
+
+
+@functools.lru_cache(maxsize=256)
 def _default_bwd_steps(
     batch: int,
     in_modes: tuple[int, ...],
     out_modes: tuple[int, ...],
     ranks: tuple[int, ...],
 ) -> tuple[tuple[str, tuple[tuple[int, int], ...]], ...]:
-    """MAC-optimal backward path per gradient (fallback for v1 plans)."""
+    """MAC-optimal backward path per gradient (fallback for v1 plans).
+
+    ``batch`` should be a :func:`_bwd_token_bucket` value — callers
+    bucket before the lookup so the cache stays small under decode-style
+    token-count churn (the cap is a backstop, not a working set).
+    """
     tn = tt_linear_network(batch, in_modes, out_modes, ranks)
     return tuple(
         (wrt, find_topk_paths(net, k=1)[0].steps)
@@ -230,8 +279,65 @@ def _resolve_backward_ops(
             backend=dx_backend if wrt == "dx" else grad_backend,
             tiling=lp.tiling,
         )
-        for wrt, steps in _default_bwd_steps(tokens, in_modes, out_modes, ranks)
+        for wrt, steps in _default_bwd_steps(
+            _bwd_token_bucket(tokens), in_modes, out_modes, ranks)
     )
+
+
+# ---------------------------------------------------------------------------
+# fusion-segmented execution (tt_gemm backend with LayerPlan.segments)
+# ---------------------------------------------------------------------------
+
+def _execute_segmented(
+    lp: LayerPlan,
+    tn: TensorNetwork,
+    tensors: dict,
+    out_edges: tuple[str, ...],
+    tokens: int,
+    interpret: Optional[bool],
+) -> jax.Array:
+    """Walk the plan's fusion segments over the live work list.
+
+    Multi-step segments execute as ONE ``pallas_call`` with fp32
+    VMEM-resident intermediates (``kernels/fused_path.py``); singleton
+    segments keep the per-step dataflow-configurable GEMM route, so the
+    result is bit-identical to the unsegmented execution (the fused
+    kernel replicates the per-step k-block accumulation order).  Each
+    segment appends its own provenance record — ``segment=(s, e)`` — in
+    addition to the layer-level record ``planned_tt_linear`` wrote.
+    """
+    steps = tuple(tuple(s) for s in lp.path_steps)
+    contract = _gemm_contract(lp, lp.tiling, interpret)
+    work: list = [(n.edges, tensors[n.name]) for n in tn.nodes]
+    bt = ops.clamp_block(lp.tiling.block_tokens, tokens)
+    for (s, e) in lp.segments:
+        record_execution(lp, tokens, path_steps=steps[s:e], segment=(s, e))
+        if e - s >= 2:
+            ec, val = ops.fused_segment(
+                work, steps[s:e], block_tokens=bt,
+                block_m=lp.tiling.block_m, block_k=lp.tiling.block_k,
+                block_n=lp.tiling.block_n, interpret=interpret)
+            # replay the per-step removals; interior placeholders are all
+            # consumed by the chain, only the final result survives
+            for (i, j) in steps[s:e]:
+                work = [w for k, w in enumerate(work) if k not in (i, j)]
+                work.append(None)
+            work[-1] = (ec, val)
+        else:
+            i, j = steps[s]
+            (ea, ta), (eb, tb) = work[i], work[j]
+            shared = [x for x in ea if x in eb]
+            ax_a = tuple(ea.index(x) for x in shared)
+            ax_b = tuple(eb.index(x) for x in shared)
+            val = contract(ta, tb, (ax_a, ax_b))
+            ec = tuple(x for x in ea if x not in shared) + tuple(
+                x for x in eb if x not in shared)
+            work = [w for k, w in enumerate(work) if k not in (i, j)]
+            work.append((ec, val))
+    ec, val = work[-1]
+    if tuple(ec) != tuple(out_edges):
+        val = jnp.transpose(val, tuple(ec.index(x) for x in out_edges))
+    return val
 
 
 # ---------------------------------------------------------------------------
@@ -261,8 +367,13 @@ def _forward_planned(
         tensors = {"X": x2d.reshape((tokens,) + tuple(in_modes))}
         tensors.update(core_tensors(tn, list(cores)))
         out_edges = ("b",) + tuple(f"i{t + 1}" for t in range(len(out_modes)))
-        y = execute_path(tn, lp.path_steps, tensors, out_edges=out_edges,
-                         contract_fn=_gemm_contract(lp, lp.tiling, interpret))
+        if fusion.has_fused(lp.segments):
+            y = _execute_segmented(lp, tn, tensors, out_edges, tokens,
+                                   interpret)
+        else:
+            y = execute_path(
+                tn, lp.path_steps, tensors, out_edges=out_edges,
+                contract_fn=_gemm_contract(lp, lp.tiling, interpret))
         return y.reshape(tokens, -1)
 
     # "jnp": the reference executor along the planned steps

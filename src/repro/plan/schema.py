@@ -221,6 +221,15 @@ class LayerPlan:
     #: TTConfig factorization) — installed as a per-layer core-shape
     #: override, so it changes parameter shapes (see Factorization)
     factorization: Optional[Factorization] = None
+    #: fusion segmentation of ``path_steps``: contiguous half-open
+    #: ``(start, end)`` step ranges covering the whole path.  Ranges
+    #: spanning >= 2 steps execute as ONE fused ``pallas_call`` with
+    #: fp32 VMEM-resident intermediates (``kernels/fused_path.py``);
+    #: singletons keep the per-step GEMM route.  Only meaningful for the
+    #: ``tt_gemm`` backend.  Optional wire field (absent/``null`` =
+    #: per-step execution throughout), so pre-fusion v4 readers stay
+    #: compatible — no schema bump.
+    segments: Optional[tuple[tuple[int, int], ...]] = None
     # provenance (not used by the executor)
     macs: int = 0
     latency_s: float = 0.0
@@ -258,6 +267,23 @@ class LayerPlan:
                 raise ValueError(
                     f"{self.name}: {len(self.path_steps)} path steps but the "
                     f"factorization has {want} cores")
+        if self.segments is not None:
+            if self.backend != "tt_gemm":
+                raise ValueError(
+                    f"{self.name}: segments only apply to the tt_gemm "
+                    f"backend, not {self.backend!r}")
+            pos = 0
+            for seg in self.segments:
+                if len(seg) != 2 or seg[0] != pos or seg[1] <= seg[0]:
+                    raise ValueError(
+                        f"{self.name}: segments must contiguously cover "
+                        f"[0, {len(self.path_steps)}), got "
+                        f"{[list(s) for s in self.segments]}")
+                pos = seg[1]
+            if pos != len(self.path_steps):
+                raise ValueError(
+                    f"{self.name}: segments cover [0, {pos}) but the path "
+                    f"has {len(self.path_steps)} steps")
 
     def with_backend(self, backend: str) -> "LayerPlan":
         """Force every contraction of the layer — forward AND backward —
@@ -272,7 +298,10 @@ class LayerPlan:
 
         bwd = tuple(dataclasses.replace(op, backend=bwd_backend(op))
                     for op in self.backward)
-        return dataclasses.replace(self, backend=backend, backward=bwd)
+        # segments describe tt_gemm fused runs; other backends drop them
+        return dataclasses.replace(
+            self, backend=backend, backward=bwd,
+            segments=self.segments if backend == "tt_gemm" else None)
 
     def to_json(self) -> dict:
         return {
@@ -286,6 +315,8 @@ class LayerPlan:
             "backward": [op.to_json() for op in self.backward],
             "factorization": (self.factorization.to_json()
                               if self.factorization is not None else None),
+            "segments": ([list(s) for s in self.segments]
+                         if self.segments is not None else None),
             "macs": self.macs,
             "latency_s": self.latency_s,
             "bwd_latency_s": self.bwd_latency_s,
@@ -306,6 +337,8 @@ class LayerPlan:
                            for b in d.get("backward", [])),
             factorization=(Factorization.from_json(d["factorization"])
                            if d.get("factorization") is not None else None),
+            segments=(tuple((int(s), int(e)) for s, e in d["segments"])
+                      if d.get("segments") is not None else None),
             macs=int(d.get("macs", 0)),
             latency_s=float(d.get("latency_s", 0.0)),
             bwd_latency_s=float(d.get("bwd_latency_s", 0.0)),

@@ -52,7 +52,9 @@ from .measure import (
     default_interpret,
     device_kind,
     measure_callable,
+    measure_fused,
     measure_gemm,
+    measure_per_step,
     measure_streaming,
 )
 from .variants import (
@@ -60,6 +62,7 @@ from .variants import (
     STREAM_BLOCK_CAPS,
     block_candidates,
     dominant_gemm,
+    fused_token_variants,
     gemm_variants,
     network_signature,
     streaming_variants,
@@ -73,9 +76,9 @@ __all__ = [
     "kernel_fingerprint", "merge_caches", "parse_variant", "variant_key",
     "MIN_BUCKET_SAMPLES", "SHAPE_BUCKET_LOG2_WIDTH", "CostCorrection",
     "fit_cost_correction", "shape_bucket",
-    "default_interpret", "device_kind", "measure_callable", "measure_gemm",
-    "measure_streaming",
+    "default_interpret", "device_kind", "measure_callable", "measure_fused",
+    "measure_gemm", "measure_per_step", "measure_streaming",
     "GEMM_BLOCK_CAPS", "STREAM_BLOCK_CAPS", "block_candidates",
-    "dominant_gemm", "gemm_variants", "network_signature",
-    "streaming_variants",
+    "dominant_gemm", "fused_token_variants", "gemm_variants",
+    "network_signature", "streaming_variants",
 ]

@@ -45,6 +45,7 @@ from .variants import (
     GEMM_BLOCK_CAPS,
     STREAM_BLOCK_CAPS,
     dominant_gemm,
+    fused_token_variants,
     gemm_variants,
     network_signature,
     streaming_variants,
@@ -73,6 +74,8 @@ class Autotuner:
         repeats: int = _measure.REPEATS,
         measure_gemm_fn=None,
         measure_streaming_fn=None,
+        measure_fused_fn=None,
+        measure_per_step_fn=None,
         kernel_fp: Optional[str] = None,
         shards: int = 1,
     ) -> None:
@@ -101,6 +104,9 @@ class Autotuner:
         self._measure_gemm = measure_gemm_fn or _measure.measure_gemm
         self._measure_streaming = (measure_streaming_fn
                                    or _measure.measure_streaming)
+        self._measure_fused = measure_fused_fn or _measure.measure_fused
+        self._measure_per_step = (measure_per_step_fn
+                                  or _measure.measure_per_step)
         self.n_measured = 0
         self.n_cache_hits = 0
         self._measured_this_run: set[str] = set()
@@ -124,6 +130,13 @@ class Autotuner:
         sig = network_signature(rebatch(tn, 1), steps)
         digest = hashlib.sha1(sig.encode()).hexdigest()[:16]
         return f"stream:{digest}:t{tokens}:{self._suffix()}"
+
+    def fused_key(self, tn: TensorNetwork, steps, segments,
+                  tokens: int) -> str:
+        sig = network_signature(rebatch(tn, 1), steps)
+        seg = "_".join(f"{s}-{e}" for s, e in segments)
+        digest = hashlib.sha1(f"{sig}|{seg}".encode()).hexdigest()[:16]
+        return f"fused:{digest}:t{tokens}:{self._suffix()}"
 
     # -- GEMM sweeps -------------------------------------------------------
     def _gemm_entry(self, M: int, K: int, N: int,
@@ -256,6 +269,69 @@ class Autotuner:
                 return None
             measured[bt] = s
         return min(measured, key=lambda bt: (measured[bt], bt))
+
+    # -- fused-segment sweeps ----------------------------------------------
+    def tune_fused(
+        self,
+        tn: TensorNetwork,
+        steps,
+        segments,
+        tokens: int,
+        *,
+        include: Sequence[int] = (),
+        budget_bytes: int = VMEM_BUDGET_BYTES,
+        caps: Sequence[int] = STREAM_BLOCK_CAPS,
+        block_k: int = 128,
+    ) -> Optional[dict]:
+        """Measured fused vs per-step seconds for one segmented layer.
+
+        Sweeps the feasible ``block_tokens`` ladder of the fused chain
+        runs (``variants.fused_token_variants`` — only blocks that
+        reproduce exactly the priced segmentation), measures the
+        spill-always per-step route once as the baseline, and returns
+        ``{"block_tokens", "fused_s", "per_step_s"}`` (``None`` when no
+        variant reproduces the segmentation).  Both routes land in the
+        persistent cache, so ``--tune cache`` replays without measuring.
+        """
+        tn = rebatch(tn, tokens)
+        steps = tuple(tuple(s) for s in steps)
+        segments = tuple((int(s), int(e)) for s, e in segments)
+        variants = fused_token_variants(
+            tn, steps, segments, tokens, caps=caps,
+            budget_bytes=budget_bytes, include=include)
+        if not variants:
+            return None
+        sig = network_signature(rebatch(tn, 1), steps)
+        entry = self.cache.ensure(
+            self.fused_key(tn, steps, segments, tokens),
+            kind="fused", backend="tt_gemm",
+            device_kind=self.device_kind, interpret=self.interpret,
+            problem={"signature": sig, "tokens": int(tokens),
+                     "segments": [list(s) for s in segments]},
+        )
+        measured = {
+            bt: self._measure_into(
+                entry, variant_key((bt,)),
+                lambda bt=bt: self._measure_fused(
+                    tn, steps, segments, bt, block_k=block_k,
+                    interpret=self.interpret,
+                    warmup=self.warmup, repeats=self.repeats))
+            for bt in variants
+        }
+        best = min(measured, key=lambda bt: (measured[bt], bt))
+        base_entry = self.cache.ensure(
+            f"fusedbase:{self.fused_key(tn, steps, segments, tokens)[6:]}",
+            kind="fused_base", backend="tt_gemm",
+            device_kind=self.device_kind, interpret=self.interpret,
+            problem={"signature": sig, "tokens": int(tokens)},
+        )
+        per_step_s = self._measure_into(
+            base_entry, variant_key((tokens,)),
+            lambda: self._measure_per_step(
+                tn, steps, interpret=self.interpret,
+                warmup=self.warmup, repeats=self.repeats))
+        return {"block_tokens": int(best), "fused_s": measured[best],
+                "per_step_s": per_step_s}
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,7 @@ KERNEL_MODULES = (
     "repro.kernels.ops",
     "repro.kernels.tt_gemm",
     "repro.kernels.streaming_tt",
+    "repro.kernels.fused_path",
 )
 
 

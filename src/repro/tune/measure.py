@@ -115,6 +115,98 @@ def synthesize_tensors(tn: TensorNetwork) -> tuple[jax.Array, list[jax.Array]]:
     return x, cores
 
 
+def synthesize_network_tensors(tn: TensorNetwork) -> dict[str, jax.Array]:
+    """Deterministic full-dims tensors for every node of a network."""
+    return {
+        n.name: jnp.asarray(
+            np.random.default_rng(_seed_for(*n.dims))
+            .standard_normal(n.dims, dtype=np.float32))
+        for n in tn.nodes
+    }
+
+
+def measure_fused(
+    tn: TensorNetwork,
+    steps: Sequence[tuple[int, int]],
+    segments: Sequence[tuple[int, int]],
+    block_tokens: int,
+    *,
+    block_k: int = 128,
+    interpret: bool | None = None,
+    warmup: int = WARMUP,
+    repeats: int = REPEATS,
+) -> float:
+    """Median seconds of the fused-segment route over one layer network.
+
+    ``tn`` is the layer network at the streamed token count; multi-step
+    segments run through ``ops.fused_segment`` (one ``pallas_call``,
+    fp32 VMEM intermediates), singletons through the per-step Pallas
+    GEMM — the same walk ``plan/executor._execute_segmented`` performs,
+    minus the provenance records.
+    """
+    steps = tuple(tuple(s) for s in steps)
+    segments = tuple((int(s), int(e)) for s, e in segments)
+    tensors = synthesize_network_tensors(tn)
+    contract = ops.gemm_contract(interpret=interpret)
+
+    @jax.jit
+    def apply(ts):
+        work: list = [(n.edges, ts[n.name]) for n in tn.nodes]
+        for s, e in segments:
+            if e - s >= 2:
+                ec, val = ops.fused_segment(
+                    work, steps[s:e], block_tokens=block_tokens,
+                    block_k=block_k, interpret=interpret)
+                for i, j in steps[s:e]:
+                    work = [w for k, w in enumerate(work) if k not in (i, j)]
+                    work.append(None)
+                work[-1] = (ec, val)
+            else:
+                i, j = steps[s]
+                (ea, ta), (eb, tb) = work[i], work[j]
+                shared = [x for x in ea if x in eb]
+                val = contract(ta, tb,
+                               (tuple(ea.index(x) for x in shared),
+                                tuple(eb.index(x) for x in shared)))
+                ec = tuple(x for x in ea if x not in shared) + tuple(
+                    x for x in eb if x not in shared)
+                work = [w for k, w in enumerate(work) if k not in (i, j)]
+                work.append((ec, val))
+        return work[-1][1]
+
+    def run():
+        return apply(tensors).block_until_ready()
+
+    return measure_callable(run, warmup=warmup, repeats=repeats)
+
+
+def measure_per_step(
+    tn: TensorNetwork,
+    steps: Sequence[tuple[int, int]],
+    *,
+    interpret: bool | None = None,
+    warmup: int = WARMUP,
+    repeats: int = REPEATS,
+) -> float:
+    """Median seconds of the spill-always per-step route (one Pallas GEMM
+    launch per path step) — the baseline the fused variant is judged
+    against, over the same synthesized tensors."""
+    from repro.core.contraction import execute_path
+
+    steps = tuple(tuple(s) for s in steps)
+    tensors = synthesize_network_tensors(tn)
+    contract = ops.gemm_contract(interpret=interpret)
+
+    @jax.jit
+    def apply(ts):
+        return execute_path(tn, steps, ts, contract_fn=contract)
+
+    def run():
+        return apply(tensors).block_until_ready()
+
+    return measure_callable(run, warmup=warmup, repeats=repeats)
+
+
 def measure_streaming(
     tn_block: TensorNetwork,
     steps: Sequence[tuple[int, int]],

@@ -92,6 +92,38 @@ def streaming_variants(
     )
 
 
+def fused_token_variants(
+    tn: TensorNetwork,
+    steps,
+    segments,
+    tokens: int,
+    *,
+    caps: Sequence[int] = STREAM_BLOCK_CAPS,
+    budget_bytes: int = VMEM_BUDGET_BYTES,
+    include: Sequence[int] = (),
+) -> list[int]:
+    """Feasible ``block_tokens`` sweep for one fused-segment problem.
+
+    Candidates are clamped to the streamed token count and filtered to
+    the blocks at which the greedy segmentation *reproduces exactly the
+    given segments* — a measured variant always executes the same fused
+    chain runs the cost model priced, never a re-segmented layout.
+    ``include`` injects the compiler's heuristic default.
+    """
+    from repro.core import fusion
+
+    steps = tuple(tuple(s) for s in steps)
+    segments = tuple((int(s), int(e)) for s, e in segments)
+    cands = {clamp_block(c, tokens) for c in caps}
+    for bt in include:
+        cands.add(clamp_block(int(bt), tokens))
+    return sorted(
+        bt for bt in cands
+        if fusion.segment_path(tn, steps, block_tokens=bt,
+                               budget_bytes=budget_bytes) == segments
+    )
+
+
 def dominant_gemm(path) -> tuple[int, int, int]:
     """The (M, K, N) of a candidate path's highest-MAC GEMM."""
     g = max(path.gemms, key=lambda g: g.macs)

@@ -120,7 +120,7 @@ def test_kernel_fingerprint_tracks_kernel_sources(tmp_path):
     calls, sensitive to any byte of any kernel file."""
     assert kernel_fingerprint() == kernel_fingerprint()
     assert len(kernel_fingerprint()) == 12
-    assert len(KERNEL_MODULES) == 3
+    assert len(KERNEL_MODULES) == 4
 
     a = tmp_path / "a.py"
     b = tmp_path / "b.py"
